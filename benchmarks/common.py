@@ -1,0 +1,15 @@
+"""Shared helpers for the paper-figure benchmarks."""
+import time
+
+
+def timed(fn, *args, reps=3, **kw):
+    fn(*args, **kw)                      # warmup
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / reps
+    return out, dt * 1e6                 # us per call
+
+
+def emit(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")

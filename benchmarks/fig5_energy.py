@@ -1,0 +1,28 @@
+"""Fig 5: attention energy, all designs, N = 1K..64K, normalized to
+2D-Unfused.  Paper: ours = 80.5%..93% reduction."""
+import statistics as st
+
+from repro.core import DESIGNS, normalized_energy, sweep
+from repro.core.workloads import PAPER_SEQS, opt_6_7b, qwen_7b
+
+from .common import emit, timed
+
+
+def run():
+    wls = [m(s).attn for m in (opt_6_7b, qwen_7b) for s in PAPER_SEQS]
+    res, us = timed(sweep, list(DESIGNS), wls, reps=1)
+    ne = normalized_energy(res)
+    for design, cells in ne.items():
+        for (wl, seq), v in sorted(cells.items()):
+            emit(f"fig5/{design}/{wl}/N={seq}", us / len(res), f"{v:.4f}")
+    ours = list(ne["3D-Flow"].values())
+    emit("fig5/ours_reduction_pct_mean", 0.0,
+         f"{100 * (1 - st.mean(ours)):.1f}")
+    emit("fig5/ours_reduction_pct_range", 0.0,
+         f"{100 * (1 - max(ours)):.1f}..{100 * (1 - min(ours)):.1f}"
+         f" (paper: 80.5..93)")
+    return ne
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Fig 6: average data-movement volume (DRAM / SRAM / vertical) per design."""
+from repro.core import DESIGNS, sweep
+from repro.core.simulator import data_movement
+from repro.core.workloads import PAPER_SEQS, opt_6_7b, qwen_7b
+
+from .common import emit, timed
+
+
+def run():
+    wls = [m(s).attn for m in (opt_6_7b, qwen_7b) for s in PAPER_SEQS]
+    res, us = timed(sweep, list(DESIGNS), wls, reps=1)
+    dm = data_movement(res)
+    for d, v in dm.items():
+        emit(f"fig6/{d}", us / len(res),
+             f"dram_GB={v['dram']/1e9:.1f};sram_GB={v['sram']/1e9:.1f};"
+             f"tsv_GB={v['tsv']/1e9:.1f}")
+    cut = 1 - dm["3D-Flow"]["sram"] / dm["2D-Fused"]["sram"]
+    emit("fig6/ours_sram_cut_vs_fused", 0.0,
+         f"{100*cut:.1f}% (paper: 76.6%)")
+    emit("fig6/fused_dram_cut_vs_unfused", 0.0,
+         f"{100*(1 - dm['2D-Fused']['dram']/dm['2D-Unfused']['dram']):.1f}%"
+         " (paper: 85.5%)")
+    return dm
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,24 @@
+"""Fig 7: inference speedup of 3D-Flow over each baseline.
+Paper: 7.62x / 1.46x / 2.36x / 1.43x."""
+from repro.core import DESIGNS, sweep
+from repro.core.simulator import speedups
+from repro.core.workloads import PAPER_SEQS, opt_6_7b, qwen_7b
+
+from .common import emit, timed
+
+PAPER = {"2D-Unfused": 7.62, "2D-Fused": 1.46, "Dual-SA": 2.36,
+         "3D-Base": 1.43}
+
+
+def run():
+    wls = [m(s).attn for m in (opt_6_7b, qwen_7b) for s in PAPER_SEQS]
+    res, us = timed(sweep, list(DESIGNS), wls, reps=1)
+    sp = speedups(res)
+    for d, v in sp.items():
+        emit(f"fig7/speedup_vs_{d}", us / len(res),
+             f"{v:.2f} (paper: {PAPER[d]})")
+    return sp
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,21 @@
+"""Fig 8: average PE-array utilization.  Paper: ours ~87%."""
+from repro.core import DESIGNS, sweep
+from repro.core.simulator import mean_utilization
+from repro.core.workloads import PAPER_SEQS, opt_6_7b, qwen_7b
+
+from .common import emit, timed
+
+
+def run():
+    wls = [m(s).attn for m in (opt_6_7b, qwen_7b) for s in PAPER_SEQS]
+    res, us = timed(sweep, list(DESIGNS), wls, reps=1)
+    util = mean_utilization(res)
+    for d, v in util.items():
+        emit(f"fig8/util_{d}", us / len(res), f"{v:.3f}")
+    emit("fig8/claim_ours_~87pct", 0.0,
+         f"{util['3D-Flow']:.3f} (paper: 0.87)")
+    return util
+
+
+if __name__ == "__main__":
+    run()

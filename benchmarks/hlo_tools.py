@@ -1,0 +1,59 @@
+"""HLO inspection helpers: largest per-device tensors, collective summary.
+
+Used by the dry-run debugging loop and the S.Perf iteration log.
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter
+
+DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+               "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+               "f64": 8}
+
+_SHAPE = re.compile(r"(\w+)\[([\d,]+)\]")
+
+
+def shape_bytes(dt: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n * DTYPE_BYTES.get(dt, 0)
+
+
+def top_tensors(hlo: str, min_bytes: int = 2 ** 27, top: int = 25):
+    """(bytes, count, type, op, sample_op_name) rows for the largest tensors."""
+    rows = Counter()
+    names = {}
+    for line in hlo.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        rhs = line.split("=", 1)[1]
+        m = _SHAPE.search(rhs)
+        if not m:
+            continue
+        dt, dims = m.groups()
+        if dt not in DTYPE_BYTES:
+            continue
+        b = shape_bytes(dt, dims)
+        if b < min_bytes:
+            continue
+        opm = re.search(r"[\}\]]\s+([\w-]+)\(", rhs)
+        op = opm.group(1) if opm else "?"
+        key = (dt, dims, op)
+        rows[key] += 1
+        if key not in names:
+            mm = re.search(r'op_name="([^"]+)"', line)
+            names[key] = mm.group(1)[:120] if mm else ""
+    out = []
+    for (dt, dims, op), cnt in rows.items():
+        out.append((shape_bytes(dt, dims), cnt, f"{dt}[{dims}]", op,
+                    names[(dt, dims, op)]))
+    out.sort(key=lambda r: -r[0])
+    return out[:top]
+
+
+def print_top(hlo: str, **kw):
+    for b, cnt, ty, op, name in top_tensors(hlo, **kw):
+        print(f"{b/2**30:8.2f} GiB x{cnt:3d}  {ty:38s} {op:22s} {name}")

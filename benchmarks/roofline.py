@@ -1,0 +1,165 @@
+"""Roofline analysis over the dry-run matrix (S.Roofline deliverable).
+
+Per (arch x shape x mesh) cell, from the compiled dry-run artifacts:
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs            [s]
+  memory term     = HBM_bytes_per_device / HBM_bw                [s]
+  collective term = collective_bytes_per_device / ICI_link_bw    [s]
+
+FLOPs and collective bytes come from the corrected static HLO analysis
+(while-loop bodies weighted by trip count - launch/hlo_cost.py); the memory
+term uses the materialized-buffer traffic proxy from the same analysis,
+cross-checked against an analytic floor (weights + KV cache + token I/O).
+
+Hardware model (TPU v5e-class): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s per ICI link.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+REPO = Path(__file__).resolve().parent.parent
+DRYRUN = REPO / "experiments" / "dryrun"
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_devices: int) -> float:
+    """MODEL_FLOPS: 6ND (train), 2ND (prefill), 2N_active*B (decode)."""
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.configs import SHAPES, get_config
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / n_devices
+
+
+def analytic_memory_floor(arch: str, shape_name: str, n_devices: int) -> float:
+    """Unavoidable HBM bytes per device per step: parameter reads (+grad/opt
+    updates for training), KV-cache read (+write) for decode."""
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.configs import SHAPES, get_config
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    params = cfg.param_count()
+    if shape.kind == "train":
+        # bf16 params read + fp32 grad write + fp32 m,v read+write
+        per_dev = params * (2 + 4 + 16) / n_devices
+        # remat-saved residual stream (bf16, write+read)
+        acts = (shape.global_batch * shape.seq_len * cfg.d_model * 2
+                * cfg.n_layers * 2) / n_devices
+        return per_dev + acts
+    if shape.kind == "prefill":
+        cache = (2 * cfg.n_layers * shape.global_batch * shape.seq_len
+                 * cfg.n_kv_heads * cfg.head_dim * 2)
+        return (params * 2 + cache) / n_devices
+    # decode
+    if cfg.family == "ssm":
+        state = cfg.n_layers * shape.global_batch * cfg.d_model * 64 * 4
+        return (params * 2 + 2 * state) / n_devices
+    cache = (2 * cfg.n_layers * shape.global_batch * shape.seq_len
+             * cfg.n_kv_heads * cfg.head_dim * 2)
+    return (params * 2 + cache) / n_devices
+
+
+def bottleneck_advice(dom: str, arch: str, shape: str) -> str:
+    if dom == "collective":
+        return ("reshape the sharding to cut resharding collectives "
+                "(head/seq-aware constraints; bf16 payloads)")
+    if dom == "memory":
+        return ("raise arithmetic intensity: larger per-device batch, "
+                "fused kernels to avoid materialized copies, bf16 residuals")
+    return ("compute-bound: increase MXU occupancy (block shapes) or "
+            "shard over more chips")
+
+
+def load_cells(dirpath: Path = DRYRUN):
+    cells = []
+    for p in sorted(dirpath.glob("*.json")):
+        if p.name.endswith(".error.json"):
+            continue
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def roofline_rows(cells):
+    rows = []
+    for rec in cells:
+        n_dev = rec["n_devices"]
+        corr = rec.get("corrected", {})
+        flops = corr.get("flops", rec["cost"]["flops"])
+        coll = corr.get("collective_bytes_tpu",
+                        corr.get("collective_bytes",
+                                 rec["collectives"]["total_bytes"]))
+        bytes_proxy = corr.get("bytes_proxy", rec["cost"]["bytes_accessed"])
+        floor = analytic_memory_floor(rec["arch"], rec["shape"], n_dev)
+        mem_bytes = max(bytes_proxy, floor)
+        t_c = flops / PEAK_FLOPS
+        t_m = mem_bytes / HBM_BW
+        t_x = coll / ICI_BW
+        terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+        dom = max(terms, key=terms.get)
+        bound = max(terms.values())
+        mf = model_flops_per_device(rec["arch"], rec["shape"], n_dev)
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+            "dominant": dom,
+            "roofline_frac": t_c / bound if bound else 0.0,
+            "model_flops": mf, "hlo_flops": flops,
+            "useful_ratio": mf / flops if flops else 0.0,
+            "mem_gib": rec["memory"]["total_per_device_bytes"] / 2 ** 30,
+            "advice": bottleneck_advice(dom, rec["arch"], rec["shape"]),
+        })
+    return rows
+
+
+def markdown_table(rows, mesh="single") -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| roofline frac | MODEL/HLO flops | mem GiB |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} "
+            f"| {r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} "
+            f"| {r['dominant']} | {r['roofline_frac']:.2f} "
+            f"| {r['useful_ratio']:.2f} | {r['mem_gib']:.1f} |")
+    return "\n".join(out)
+
+
+def run():
+    cells = load_cells()
+    if not cells:
+        print("roofline/no_dryrun_data,0.0,run launch.dryrun first")
+        return []
+    rows = roofline_rows(cells)
+    for r in rows:
+        print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},0.0,"
+              f"dom={r['dominant']};frac={r['roofline_frac']:.2f};"
+              f"tc={r['t_compute_s']:.2e};tm={r['t_memory_s']:.2e};"
+              f"tx={r['t_collective_s']:.2e};useful={r['useful_ratio']:.2f}")
+    out = REPO / "experiments" / "roofline.md"
+    out.write_text("# Roofline (single-pod 16x16)\n\n"
+                   + markdown_table(rows, "single")
+                   + "\n\n# Roofline (multi-pod 2x16x16)\n\n"
+                   + markdown_table(rows, "multi") + "\n")
+    print(f"roofline/table_written,0.0,{out}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  fig1   motivation energy split (fused vs unfused, SRAM > 60%)
+  fig5   normalized attention energy, all designs, 1K..64K
+  fig6   data-movement volumes (DRAM / SRAM / TSV)
+  fig7   speedups vs the four baselines
+  fig8   PE-array utilization
+  table2 3D-Flow energy breakdown
+  kernel kernel micro-benchmarks + latency-balanced block configs
+  roofline  three-term roofline per dry-run cell (needs experiments/dryrun)
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (fig1_motivation, fig5_energy, fig6_data_movement,
+                            fig7_speedup, fig8_utilization, kernel_bench,
+                            roofline, table2_breakdown)
+    fig1_motivation.run()
+    fig5_energy.run()
+    fig6_data_movement.run()
+    fig7_speedup.run()
+    fig8_utilization.run()
+    table2_breakdown.run()
+    kernel_bench.run()
+    roofline.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Reproduce the paper's evaluation (Figs 1, 5-8, Table II) from the
+3D-Flow co-design simulator.
+
+    PYTHONPATH=src python examples/paper_eval.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+
+def main():
+    from benchmarks import (fig1_motivation, fig5_energy, fig6_data_movement,
+                            fig7_speedup, fig8_utilization, table2_breakdown)
+    print("name,us_per_call,derived")
+    fig1_motivation.run()
+    fig5_energy.run()
+    fig6_data_movement.run()
+    fig7_speedup.run()
+    fig8_utilization.run()
+    table2_breakdown.run()
+
+
+if __name__ == "__main__":
+    main()

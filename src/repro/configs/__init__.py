@@ -1,0 +1,50 @@
+"""Config registry: --arch <id> resolution for every assigned architecture."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from .base import SHAPES, MeshConfig, ModelConfig, ServeConfig, ShapeSpec, TrainConfig
+
+# assigned architectures (10) + the paper's own evaluation models (2)
+ARCH_MODULES: Dict[str, str] = {
+    "llava-next-34b": "llava_next_34b",
+    "granite-3-2b": "granite_3_2b",
+    "gemma3-4b": "gemma3_4b",
+    "granite-8b": "granite_8b",
+    "olmo-1b": "olmo_1b",
+    "whisper-base": "whisper_base",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "opt-6.7b": "opt_6_7b",
+    "qwen-7b": "qwen_7b",
+}
+
+ASSIGNED_ARCHS = [
+    "llava-next-34b", "granite-3-2b", "gemma3-4b", "granite-8b", "olmo-1b",
+    "whisper-base", "zamba2-2.7b", "qwen3-moe-235b-a22b", "olmoe-1b-7b",
+    "rwkv6-1.6b",
+]
+
+
+def _module(arch: str):
+    try:
+        return importlib.import_module(f".{ARCH_MODULES[arch]}", __package__)
+    except KeyError:
+        raise KeyError(f"unknown arch {arch!r}; one of {sorted(ARCH_MODULES)}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).get_config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).get_smoke_config()
+
+
+__all__ = [
+    "ARCH_MODULES", "ASSIGNED_ARCHS", "SHAPES", "MeshConfig", "ModelConfig",
+    "ServeConfig", "ShapeSpec", "TrainConfig", "get_config", "get_smoke_config",
+]

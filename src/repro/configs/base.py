@@ -1,0 +1,198 @@
+"""Config system: model / mesh / train / serve configuration dataclasses.
+
+Every assigned architecture provides `get_config()` returning the exact
+published configuration, and `get_smoke_config()` returning a reduced config
+of the same family for CPU smoke tests.  The full configs are exercised only
+through the dry-run (ShapeDtypeStruct lowering, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+
+    # --- numerics / layers -------------------------------------------------
+    norm: str = "rmsnorm"       # rmsnorm | layernorm | nonparam_ln
+    act: str = "silu"           # silu | gelu
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = True
+    qk_norm: bool = False       # gemma3-style per-head RMS norm of q and k
+
+    # --- position / attention pattern --------------------------------------
+    rope_theta: float = 10_000.0
+    rope_scaling: float = 1.0   # dynamic RoPE scaling (paper's long-seq trick)
+    sliding_window: int = 0     # 0 = full attention
+    global_every: int = 0       # gemma3: every Nth layer is global, rest local
+    attn_logit_softcap: float = 0.0
+    use_rope: bool = True       # olmo/whisper use learned/sinusoidal instead
+
+    # --- MoE ----------------------------------------------------------------
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_capacity_factor: float = 1.25
+
+    # --- SSM (Mamba2) --------------------------------------------------------
+    ssm_state: int = 0
+    ssm_heads: int = 0          # 0 -> derived
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+
+    # --- hybrid (zamba2) ------------------------------------------------------
+    shared_attn_every: int = 0  # one shared-weight attn block every k ssm blocks
+
+    # --- RWKV ------------------------------------------------------------------
+    rwkv: bool = False
+
+    # --- encoder-decoder (whisper) ----------------------------------------------
+    encoder_layers: int = 0     # > 0 => enc-dec
+
+    # --- modality frontend stubs ---------------------------------------------
+    frontend: str = ""          # "" | "vision" | "audio"
+    frontend_tokens: int = 0    # vision: patch embeddings prepended
+
+    max_seq: int = 524_288
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        assert self.n_heads % max(self.n_kv_heads, 1) == 0, \
+            f"{self.name}: n_heads must be divisible by n_kv_heads"
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.rwkv or (self.family == "ssm" and not self.rwkv)
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if decode-time state does not grow O(seq) with full attention
+        (SSM / hybrid / linear attention) - gates the long_500k shape."""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embedding + blocks), for 6ND math."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.head_dim
+        attn = d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+        n_ffn_mats = 3 if self.act == "silu" else 2
+        if self.moe_experts:
+            ffn = n_ffn_mats * d * f * self.moe_experts + d * self.moe_experts
+        else:
+            ffn = n_ffn_mats * d * f
+        if self.rwkv:
+            per_layer = d * d * 4 + d * f * 2 + 10 * d
+        elif self.family in ("ssm", "hybrid"):
+            # Mamba2 block: in_proj (z, x, B, C, dt), depthwise conv, out_proj.
+            # zamba2-style hybrids put the MLP only in the shared attn block.
+            d_in = self.ssm_expand * d
+            ssm = d * (2 * d_in + 2 * self.ssm_state) + d_in * d
+            per_layer = ssm
+        else:
+            per_layer = attn + ffn
+        total = self.n_layers * per_layer + v * d * (1 if self.tie_embeddings else 2)
+        if self.shared_attn_every:
+            total += attn + n_ffn_mats * d * f
+        if self.encoder_layers:
+            total += self.encoder_layers * (attn + ffn) + attn * self.n_layers
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top_k of the experts)."""
+        if not self.moe_experts:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        n_ffn_mats = 3 if self.act == "silu" else 2
+        dense_ffn_all = self.n_layers * n_ffn_mats * d * f * self.moe_experts
+        dense_ffn_active = self.n_layers * n_ffn_mats * d * f * self.moe_top_k
+        return int(self.param_count() - dense_ffn_all + dense_ffn_active)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    """Production mesh description (see launch/mesh.py)."""
+    multi_pod: bool = False
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (2, 16, 16) if self.multi_pod else (16, 16)
+
+    @property
+    def axes(self) -> Tuple[str, ...]:
+        return ("pod", "data", "model") if self.multi_pod else ("data", "model")
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    global_batch: int = 256
+    seq_len: int = 4096
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.95
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+    remat: str = "none"         # none | full | dots
+    grad_compression: str = ""  # "" | int8
+    seed: int = 0
+    log_every: int = 10
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_seq: int = 4096
+    prefill_chunk: int = 512
+    max_new_tokens: int = 64
+    temperature: float = 0.0    # 0 = greedy
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}

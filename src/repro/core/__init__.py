@@ -1,0 +1,36 @@
+"""3D-Flow / 3D-FlashAttention core: the paper's contribution.
+
+- arch:       Table I accelerator design points
+- energy:     Accelergy-style activity -> energy model
+- schedule:   latency-balanced tier scheduling (the 2d-cycle pipeline)
+- dataflows:  analytical models of 3D-Flow and the four baselines
+- simulator:  design x workload sweeps behind every paper figure
+- workloads:  OPT (MHA) / Qwen (GQA) and assigned-arch attention workloads
+- tpu_mapping: the paper's balance principle re-targeted at Pallas blocks
+"""
+from .arch import DESIGNS, AcceleratorSpec, get_spec
+from .energy import Activity, EnergyBreakdown, EnergyTable, energy_of
+from .schedule import (balance_chain, balanced_ii, is_bubble_free,
+                       pipeline_cycles, threed_flash_schedule)
+from .simulator import (SimResult, data_movement, mean_utilization,
+                        normalized_energy, simulate_attention, simulate_model,
+                        speedups, sweep)
+from .thermal import ThermalSpec, junction_temp_c
+from .thermal import report as thermal_report
+from .tpu_mapping import BlockConfig, choose_block_config
+from .workloads import (PAPER_MODELS, PAPER_SEQS, AttentionWorkload,
+                        ModelWorkload, from_model_config, opt_6_7b, paper_grid,
+                        qwen_7b)
+
+__all__ = [
+    "DESIGNS", "AcceleratorSpec", "get_spec",
+    "Activity", "EnergyBreakdown", "EnergyTable", "energy_of",
+    "balance_chain", "balanced_ii", "is_bubble_free", "pipeline_cycles",
+    "threed_flash_schedule",
+    "SimResult", "data_movement", "mean_utilization", "normalized_energy",
+    "simulate_attention", "simulate_model", "speedups", "sweep",
+    "BlockConfig", "choose_block_config",
+    "ThermalSpec", "junction_temp_c", "thermal_report",
+    "PAPER_MODELS", "PAPER_SEQS", "AttentionWorkload", "ModelWorkload",
+    "from_model_config", "opt_6_7b", "paper_grid", "qwen_7b",
+]

@@ -1,0 +1,132 @@
+"""Bridge from the paper's latency-balanced tier scheduling to TPU kernels.
+
+The paper's scheduling principle: assign the fused attention chain to compute
+stages such that every stage has the same initiation interval -> bubble-free
+pipeline.  On TPU the "tiers" are the MXU (128x128 systolic matmul) and the
+VPU (8x128 vector unit), and the "TSV register links" are VREGs/VMEM inside a
+single Pallas kernel.  The degree of freedom is the block shape
+(block_q, block_kv): it sets the per-block latency of each stage and the VMEM
+working set.
+
+This module picks block shapes by the same balance criterion the paper uses
+across tiers, and checks the Pallas grid pipeline is "bubble-free" in the
+paper's sense: HBM->VMEM DMA time for the next block <= compute time of the
+current block.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import List, Tuple
+
+from .schedule import balance_chain
+
+# TPU v5e-class hardware constants (per core)
+MXU_DIM = 128
+MXU_FLOPS_PER_CYCLE = 2 * MXU_DIM * MXU_DIM      # one 128x128 MAC wave / cycle
+VPU_LANES = 8 * 128                              # 8 sublanes x 128 lanes
+VPU_EXP_CYCLES = 4.0                             # transcendental cost factor
+VMEM_BYTES = 64 * 1024 * 1024                    # ~64 MiB usable VMEM budget
+HBM_BYTES_PER_CYCLE = 819e9 / 0.94e9             # ~871 B/cycle at 940 MHz
+
+
+@dataclass(frozen=True)
+class BlockConfig:
+    """Chosen Pallas block shapes for the fused attention kernel."""
+    block_q: int
+    block_kv: int
+    stages: Tuple[Tuple[str, float], ...]   # (stage name, cycles per block)
+    vmem_bytes: int
+    mxu_cycles: float
+    vpu_cycles: float
+    dma_cycles: float
+
+    @property
+    def balanced(self) -> float:
+        """Stage imbalance: max/mean stage latency (1.0 = perfectly balanced,
+        the paper's bubble-free criterion)."""
+        lat = [c for _, c in self.stages]
+        return max(lat) / (sum(lat) / len(lat))
+
+    @property
+    def bubble_free(self) -> bool:
+        """Grid pipeline analogue of the paper's 2d-cycle property: next
+        block's DMA hides under current block's compute."""
+        return self.dma_cycles <= (self.mxu_cycles + self.vpu_cycles)
+
+
+def stage_latencies(block_q: int, block_kv: int, head_dim: int,
+                    dtype_bytes: int = 2) -> List[Tuple[str, float]]:
+    """Per-block latency of each fused-chain stage on its TPU unit.
+
+    Mirrors the paper's four tiers:
+      QK^T  -> MXU
+      rowmax/subtract -> VPU
+      exp/rowsum/rescale -> VPU (transcendental-weighted)
+      PV + O update -> MXU
+    """
+    mm1 = block_q * block_kv * head_dim          # MACs
+    qk = 2.0 * mm1 / MXU_FLOPS_PER_CYCLE
+    elems = block_q * block_kv
+    rowmax = 2.0 * elems / VPU_LANES
+    expsum = elems * (VPU_EXP_CYCLES + 2.0) / VPU_LANES
+    mm2 = block_q * block_kv * head_dim
+    pv = 2.0 * mm2 / MXU_FLOPS_PER_CYCLE + 2.0 * block_q * head_dim / VPU_LANES
+    return [("qk", qk), ("rowmax", rowmax), ("expsum", expsum), ("pv", pv)]
+
+
+def vmem_working_set(block_q: int, block_kv: int, head_dim: int,
+                     dtype_bytes: int = 2, acc_bytes: int = 4) -> int:
+    """Double-buffered VMEM bytes for one grid step of the fused kernel."""
+    q = block_q * head_dim * dtype_bytes
+    kv = 2 * block_kv * head_dim * dtype_bytes
+    s = block_q * block_kv * acc_bytes              # scores in fp32
+    o = block_q * head_dim * acc_bytes
+    stats = 2 * block_q * acc_bytes
+    return 2 * (q + kv) + s + o + stats             # in/out double buffering
+
+
+def choose_block_config(head_dim: int, seq_len: int, dtype_bytes: int = 2,
+                        vmem_budget: int = VMEM_BYTES // 2) -> BlockConfig:
+    """Latency-balanced block-shape selection (the paper's scheduling method
+    re-targeted at MXU/VPU stage balance).
+
+    Candidates are MXU-aligned (multiples of 128).  Of the candidates that
+    (a) fit the VMEM budget and (b) are bubble-free (DMA hidden), pick the one
+    minimizing stage imbalance, tie-breaking on larger blocks (fewer grid
+    steps, better MXU occupancy).
+    """
+    cands = []
+    for bq in (128, 256, 512, 1024):
+        if bq > max(seq_len, 128):
+            continue
+        for bkv in (128, 256, 512, 1024, 2048):
+            if bkv > max(seq_len, 128):
+                continue
+            stages = stage_latencies(bq, bkv, head_dim, dtype_bytes)
+            vmem = vmem_working_set(bq, bkv, head_dim, dtype_bytes)
+            if vmem > vmem_budget:
+                continue
+            mxu = sum(c for n, c in stages if n in ("qk", "pv"))
+            vpu = sum(c for n, c in stages if n in ("rowmax", "expsum"))
+            dma = (bkv * head_dim * 2 * dtype_bytes) / HBM_BYTES_PER_CYCLE
+            cfg = BlockConfig(block_q=bq, block_kv=bkv,
+                              stages=tuple(stages), vmem_bytes=vmem,
+                              mxu_cycles=mxu, vpu_cycles=vpu, dma_cycles=dma)
+            cands.append(cfg)
+    if not cands:
+        stages = stage_latencies(128, 128, head_dim, dtype_bytes)
+        return BlockConfig(128, 128, tuple(stages),
+                           vmem_working_set(128, 128, head_dim),
+                           sum(c for n, c in stages if n in ("qk", "pv")),
+                           sum(c for n, c in stages if n in ("rowmax", "expsum")),
+                           0.0)
+    bubble_free = [c for c in cands if c.bubble_free] or cands
+    return min(bubble_free, key=lambda c: (round(c.balanced, 3),
+                                           -c.block_q * c.block_kv))
+
+
+def tier_assignment_for_chain(costs: List[float], n_units: int = 4):
+    """Expose the generalized latency balancer for arbitrary fused chains
+    (paper: "generalizable to other fused operators beyond attention")."""
+    return balance_chain(costs, n_units)

@@ -1,0 +1,3 @@
+from .pipeline import DataPipeline, SyntheticCorpus
+
+__all__ = ["DataPipeline", "SyntheticCorpus"]

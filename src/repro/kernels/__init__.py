@@ -1,0 +1,10 @@
+"""Pallas TPU kernels (+ jnp reference oracles) for the perf-critical layers.
+
+flash_attention / flash_decode implement the paper's register-resident fused
+attention chain on TPU (VMEM/VREG instead of hybrid-bonded TSVs);
+mamba2_scan / rwkv6_scan apply the same fusion principle to the
+attention-free architectures.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,120 @@
+"""Pallas TPU flash-decoding: one query token vs a long KV cache.
+
+Grid walks KV blocks sequentially per (batch, kv-head); the running
+(m, l, acc) triple lives in VMEM scratch - the same register-resident merge
+the paper performs across tiers, here across KV blocks of a 32K-512K cache.
+The per-sequence valid length arrives via scalar-memory (SMEM) so masking
+is branch-free.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LOG2E = 1.4426950408889634
+NEG_INF = -1e30
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, window: int, scale: float, block_kv: int,
+                   gq: int):
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    valid = len_ref[pl.program_id(0)]
+    k_first = j * block_kv
+    run = k_first < valid
+    if window > 0:
+        run = run & (k_first + block_kv > valid - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, D)
+        k = k_ref[0].astype(jnp.float32)[:, 0]               # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G,bk)
+        pos = k_first + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = pos < valid
+        if window > 0:
+            mask = mask & (pos >= valid - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.where(mask, jnp.exp2((s - m_safe) * LOG2E), 0.0)
+        alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0,
+                          jnp.exp2((m_prev - m_new) * LOG2E))
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        m_ref[...] = m_new
+        v = v_ref[0].astype(jnp.float32)[:, 0]               # (bk, D)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale", "block_kv"))
+def flash_decode(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                 scale: Optional[float] = None,
+                 block_kv: int = 512) -> jax.Array:
+    """q: (B,1,Hq,D); caches: (B,S,Hkv,D); cache_len: (B,) or scalar."""
+    B, _, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    if cache_len.ndim == 0:
+        cache_len = jnp.full((B,), cache_len, jnp.int32)
+
+    block_kv = min(block_kv, max(S, 128))
+    pk = (-S) % block_kv
+    kc = jnp.pad(k_cache, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k_cache
+    vc = jnp.pad(v_cache, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v_cache
+    nk = (S + pk) // block_kv
+
+    qg = q.reshape(B, Hkv, G, D)
+
+    kernel = functools.partial(_decode_kernel, window=window, scale=scale,
+                               block_kv=block_kv, gq=G)
+    grid = (B, Hkv, nk)
+    o = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # cache_len, prefetched
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_kv, 1, D), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, D), lambda b, h, j: (b, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=_interpret(),
+    )(cache_len, qg, kc, vc)
+    return o.reshape(B, 1, Hq, D)

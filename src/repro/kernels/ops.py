@@ -1,0 +1,319 @@
+"""Public jit'd kernel wrappers: impl dispatch (pallas | ref) + custom VJP.
+
+The forward is the paper's technique on TPU: the fused QK^T -> softmax -> PV
+chain stays VMEM/VREG-resident inside one Pallas kernel (ref = chunked jnp
+with identical math, used on CPU and in the dry-run).  The backward is a
+memory-efficient chunked FlashAttention-2 backward (recompute-from-(q,k,v,
+o,lse); no N^2 residuals), so training never materializes attention scores
+either - "from buffers to registers" applied to both passes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+NEG_INF = ref.NEG_INF
+LOG2E = 1.4426950408889634
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+# ===========================================================================
+# flash_attention with custom (chunked) VJP
+# ===========================================================================
+
+def _fwd_impl(q, k, v, causal, window, softcap, scale, impl):
+    if impl == "pallas":
+        from . import flash_attention as fa
+        return fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                      logit_softcap=softcap, scale=scale)
+    o = ref.flash_attention(q, k, v, causal=causal, window=window,
+                            logit_softcap=softcap, scale=scale)
+    lse = _lse_ref(q, k, causal, window, softcap, scale)
+    return o, lse
+
+
+def _lse_ref(q, k, causal, window, softcap, scale, block_kv: int = 512):
+    """Row log-sum-exp (natural log), chunked."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    nblk = -(-Skv // block_kv)
+    pad = nblk * block_kv - Skv
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
+    kb = jnp.moveaxis(kp.reshape(B, nblk, block_kv, Hkv, D), 1, 0)
+    qf = q.reshape(B, Sq, Hkv, G, D)
+    q_pos = jnp.arange(Sq)
+
+    def body(carry, blk):
+        m, l = carry
+        kblk, j = blk
+        k_pos = j * block_kv + jnp.arange(block_kv)
+        s = ref.mixed_einsum("bqhgd,bkhd->bqhgk", qf, kblk) * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = k_pos[None, :] <= (Skv - 1)
+        if causal or window > 0:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window > 0:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_blk = jnp.max(s, -1)
+        m_new = jnp.maximum(m, m_blk)
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.where(mask[None, :, None, None, :],
+                      jnp.exp2((s - m_safe[..., None]) * LOG2E), 0.0)
+        alpha = jnp.where(m <= NEG_INF / 2, 0.0, jnp.exp2((m - m_new) * LOG2E))
+        return (m_new, l * alpha + p.sum(-1)), None
+
+    m0 = jnp.full((B, Sq, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    (m, l), _ = jax.lax.scan(body, (m0, l0), (kb, jnp.arange(nblk)))
+    lse = m + jnp.log(jnp.maximum(l, 1e-20))
+    return lse.reshape(B, Sq, Hq)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_attention(q, k, v, causal, window, softcap, scale, impl):
+    o, _ = _fwd_impl(q, k, v, causal, window, softcap, scale, impl)
+    return o
+
+
+def _flash_fwd_rule(q, k, v, causal, window, softcap, scale, impl):
+    o, lse = _fwd_impl(q, k, v, causal, window, softcap, scale, impl)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd_rule(causal, window, softcap, scale, impl, res, do,
+                    block_kv: int = 512):
+    """FA-2 backward: Pallas kernels on TPU (kernels/flash_backward.py);
+    chunked jnp recompute-from-(q,k,v,o,lse) otherwise."""
+    q, k, v, o, lse = res
+    if impl == "pallas":
+        from . import flash_backward as fb
+        return fb.flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
+                                      window=window, logit_softcap=softcap,
+                                      scale=scale)
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    sc = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    nblk = -(-Skv // block_kv)
+    pad = nblk * block_kv - Skv
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v
+    kb = jnp.moveaxis(kp.reshape(B, nblk, block_kv, Hkv, D), 1, 0)
+    vb = jnp.moveaxis(vp.reshape(B, nblk, block_kv, Hkv, D), 1, 0)
+
+    qb = q.reshape(B, Sq, Hkv, G, D)                       # stay bf16
+    dob = do.astype(q.dtype).reshape(B, Sq, Hkv, G, D)
+    of = o.reshape(B, Sq, Hkv, G, D)
+    lsef = lse.astype(jnp.float32).reshape(B, Sq, Hkv, G)
+    delta = jnp.sum(dob.astype(jnp.float32) * of.astype(jnp.float32), -1)
+    q_pos = jnp.arange(Sq)
+
+    def body(dq_acc, blk):
+        kblk, vblk, j = blk
+        k_pos = j * block_kv + jnp.arange(block_kv)
+        s_raw = ref.mixed_einsum("bqhgd,bkhd->bqhgk", qb, kblk) * sc
+        if softcap > 0.0:
+            t = jnp.tanh(s_raw / softcap)
+            s = softcap * t
+        else:
+            s = s_raw
+        mask = k_pos[None, :] <= (Skv - 1)
+        if causal or window > 0:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window > 0:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        p = jnp.exp2((s - lsef[..., None]) * LOG2E)
+        p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+        pb = p.astype(q.dtype)
+        dv_j = ref.mixed_einsum("bqhgk,bqhgd->bkhd", pb, dob)
+        dp = ref.mixed_einsum("bqhgd,bkhd->bqhgk", dob, vblk)
+        ds = p * (dp - delta[..., None])
+        if softcap > 0.0:
+            ds = ds * (1.0 - t * t)
+        dsb = ds.astype(q.dtype)
+        dq_acc = dq_acc + ref.mixed_einsum("bqhgk,bkhd->bqhgd", dsb, kblk) * sc
+        dk_j = ref.mixed_einsum("bqhgk,bqhgd->bkhd", dsb, qb) * sc
+        return dq_acc, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, Sq, Hkv, G, D), jnp.float32)
+    dq, (dk_blocks, dv_blocks) = jax.lax.scan(
+        body, dq0, (kb, vb, jnp.arange(nblk)))
+    dk = jnp.moveaxis(dk_blocks, 0, 1).reshape(B, nblk * block_kv, Hkv, D)
+    dv = jnp.moveaxis(dv_blocks, 0, 1).reshape(B, nblk * block_kv, Hkv, D)
+    del dk_blocks, dv_blocks
+    dq = dq.reshape(B, Sq, Hq, D).astype(q.dtype)
+    return dq, dk[:, :Skv].astype(k.dtype), dv[:, :Skv].astype(v.dtype)
+
+
+_flash_attention.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    logit_softcap: float = 0.0,
+                    scale: Optional[float] = None,
+                    impl: Optional[str] = None) -> jax.Array:
+    """Fused attention.  q: (B,Sq,Hq,D); k,v: (B,Skv,Hkv,D) (GQA allowed)."""
+    impl = impl or default_impl()
+    return _flash_attention(q, k, v, causal, window, logit_softcap, scale, impl)
+
+
+# ===========================================================================
+# decode
+# ===========================================================================
+
+def flash_decode(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                 scale: Optional[float] = None,
+                 impl: Optional[str] = None) -> jax.Array:
+    impl = impl or default_impl()
+    if impl == "pallas":
+        from . import flash_decode as fd
+        return fd.flash_decode(q, k_cache, v_cache, cache_len, window=window,
+                               scale=scale)
+    return ref.flash_decode(q, k_cache, v_cache, cache_len, window=window,
+                            scale=scale)
+
+
+def decode_attention_naive(q, k_cache, v_cache, cache_len, *,
+                           scale: Optional[float] = None) -> jax.Array:
+    """Unchunked decode attention for SPMD sequence-parallel KV caches.
+
+    Deliberately written as plain einsum + reductions over the cache's seq
+    axis: when the cache is sharded on seq, XLA's SPMD partitioner turns the
+    max / sum reductions into partial reductions + small all-reduces - the
+    paper's partial-softmax tier merge, synthesized across chips.  (The
+    lax.scan-chunked path cannot be partitioned this way.)
+    """
+    B, _, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    sc = scale if scale is not None else 1.0 / math.sqrt(D)
+    cache_len = jnp.asarray(cache_len)
+    if cache_len.ndim == 0:
+        cache_len = jnp.full((B,), cache_len)
+    qf = (q.astype(jnp.float32) * sc).reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32))
+    mask = jnp.arange(S)[None, :] < cache_len[:, None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, -1, keepdims=True)
+    p = jnp.where(mask[:, None, None, :], jnp.exp2((s - m) * LOG2E), 0.0)
+    l = jnp.sum(p, -1, keepdims=True)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p / jnp.maximum(l, 1e-20),
+                   v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+def seq_parallel_decode(q, k_cache_local, v_cache_local, cache_len, *,
+                        axis: str = "data",
+                        scale: Optional[float] = None) -> jax.Array:
+    """Sequence-parallel decode INSIDE shard_map: each device holds a slice
+    of the KV cache along seq; compute local partial (m, l, o), all-gather
+    the tiny partials, merge with the log-sum-exp combine.
+
+    This is the paper's tier-merge applied across chips: partials flow
+    "register-to-register" (ICI) instead of re-materializing the cache.
+    q: (B,1,Hq,D) replicated; caches: (B, S_local, Hkv, D) local shard.
+    """
+    B, _, Hq, D = q.shape
+    S_local = k_cache_local.shape[1]
+    G = Hq // k_cache_local.shape[2]
+    idx = jax.lax.axis_index(axis)
+    shard_start = idx * S_local
+    local_len = jnp.clip(cache_len - shard_start, 0, S_local)
+
+    m, l, o = _decode_partials(q, k_cache_local, v_cache_local, local_len,
+                               scale=scale)
+    # gather tiny (m, l, o) partials across the sequence shards
+    m_all = jax.lax.all_gather(m, axis)          # (P, B, Hkv, G)
+    l_all = jax.lax.all_gather(l, axis)
+    o_all = jax.lax.all_gather(o, axis)          # (P, B, Hkv, G, D)
+    m_c, l_c, o_c = ref.combine_partial_softmax(m_all, l_all, o_all)
+    o_final = o_c / jnp.maximum(l_c, 1e-20)[..., None]
+    return o_final.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+def _decode_partials(q, kc, vc, valid_len, *, scale=None, block_kv: int = 1024):
+    B, _, Hq, D = q.shape
+    S, Hkv = kc.shape[1], kc.shape[2]
+    G = Hq // Hkv
+    sc = scale if scale is not None else 1.0 / math.sqrt(D)
+    valid_len = jnp.asarray(valid_len)
+    if valid_len.ndim == 0:
+        valid_len = jnp.full((B,), valid_len)
+    nblk = -(-S // block_kv)
+    pad = nblk * block_kv - S
+    kp = jnp.pad(kc, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else kc
+    vp = jnp.pad(vc, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else vc
+    kb = jnp.moveaxis(kp.reshape(B, nblk, block_kv, Hkv, D), 1, 0)
+    vb = jnp.moveaxis(vp.reshape(B, nblk, block_kv, Hkv, D), 1, 0)
+    qf = (q.astype(jnp.float32) * sc).reshape(B, Hkv, G, D)
+
+    def body(carry, blk):
+        m, l, o = carry
+        kblk, vblk, j = blk
+        pos = j * block_kv + jnp.arange(block_kv)
+        s = jnp.einsum("bhgd,bkhd->bhgk", qf, kblk.astype(jnp.float32))
+        mask = pos[None, :] < valid_len[:, None]
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, -1))
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.where(mask[:, None, None, :],
+                      jnp.exp2((s - m_safe[..., None]) * LOG2E), 0.0)
+        alpha = jnp.where(m <= NEG_INF / 2, 0.0, jnp.exp2((m - m_new) * LOG2E))
+        l = l * alpha + p.sum(-1)
+        o = o * alpha[..., None] + jnp.einsum(
+            "bhgk,bkhd->bhgd", p, vblk.astype(jnp.float32))
+        return (m_new, l, o), None
+
+    # varying-zero seed: under shard_map the scan carry must carry the same
+    # "varying manual axes" type as the body outputs (which depend on the
+    # sharded cache); outside shard_map this is +0.0
+    vzero = jnp.sum(kc[:, :0].astype(jnp.float32))
+    m0 = jnp.full((B, Hkv, G), NEG_INF, jnp.float32) + vzero
+    l0 = jnp.zeros((B, Hkv, G), jnp.float32) + vzero
+    o0 = jnp.zeros((B, Hkv, G, D), jnp.float32) + vzero
+    (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0), (kb, vb, jnp.arange(nblk)))
+    return m, l, o
+
+
+# ===========================================================================
+# SSM / RWKV
+# ===========================================================================
+
+def mamba2_scan(x, dt, A, Bm, Cm, *, impl: Optional[str] = None):
+    impl = impl or default_impl()
+    if impl == "pallas":
+        from . import mamba2_scan as mk
+        return mk.mamba2_scan(x, dt, A, Bm, Cm)
+    if impl == "naive":
+        return ref.mamba2_scan(x, dt, A, Bm, Cm)
+    return ref.mamba2_scan_chunked(x, dt, A, Bm, Cm)
+
+
+mamba2_step = ref.mamba2_step
+
+
+def rwkv6_scan(r, k, v, w, u, *, impl: Optional[str] = None):
+    impl = impl or default_impl()
+    if impl == "pallas":
+        from . import rwkv6_scan as rk
+        return rk.rwkv6_scan(r, k, v, w, u)
+    if impl == "naive":
+        return ref.rwkv6_scan(r, k, v, w, u)
+    return ref.rwkv6_scan_chunked(r, k, v, w, u)
+
+
+rwkv6_step = ref.rwkv6_step

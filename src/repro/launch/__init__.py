@@ -1,0 +1,1 @@
+"""Launch layer: production mesh, dry-run driver, train/serve entry points."""

@@ -1,0 +1,287 @@
+"""Static HLO cost analyzer with correct while-loop (scan) accounting.
+
+XLA's compiled.cost_analysis() counts each while-body ONCE, which
+undercounts scan-over-layers models by ~n_layers.  This analyzer parses the
+per-partition HLO text, builds the computation call graph (fusion calls,
+reduce to_apply, while body/condition), extracts each while loop's trip
+count from its condition computation, and accumulates:
+
+  * dot FLOPs            (2 x prod(result dims) x prod(contracting dims))
+  * collective bytes     (all-gather / all-reduce / reduce-scatter /
+                          all-to-all / collective-permute result bytes)
+  * memory-traffic proxy (sum of materialized result-buffer bytes; post-
+                          fusion HLO materializes each non-trivial result)
+
+weighted by the execution multiplicity of the computation they live in.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+               "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+               "f64": 8}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_CALLEE_RE = re.compile(r"(?:calls|to_apply|body|condition)=%([\w.\-]+)")
+_OP_RE = re.compile(r"^\(?[^=]*?\)?\s*([\w\-]+)\(")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "copy-done", "copy-start", "after-all",
+                   "partition-id", "replica-id", "iota"}
+
+
+def _shape_dims(type_str: str):
+    """First shape in a type string -> (dtype, [dims]).  Tuples: all shapes."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",")] if dims else []
+        out.append((dt, d))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    op: str
+    rhs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)   # name -> type str
+    callees: List[str] = field(default_factory=list)
+    while_edges: List[tuple] = field(default_factory=list)  # (body, cond)
+    branch_groups: List[List[str]] = field(default_factory=list)
+    fusion_internal: set = field(default_factory=set)
+
+
+def parse_hlo(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    cur_fusion_internal = set()
+    entry = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        header = (line.startswith(("%", "ENTRY")) and "{" in line
+                  and "->" in line)
+        if header:
+            m = re.match(r"(?:ENTRY\s+)?%([\w.\-]+)", line.strip())
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if cur is None or not s or s == "}":
+            if s == "}":
+                cur = None
+            continue
+        dm = _DEF_RE.match(s)
+        if not dm:
+            continue
+        name, rhs = dm.groups()
+        # op name: first word after the type signature's closing
+        opm = re.search(r"(?:\}|\]|\))\s*([\w\-]+)\(", rhs)
+        if opm:
+            op = opm.group(1)
+        else:
+            head = rhs.split("(")[0].split()
+            op = head[-1] if head else "?"
+        cur.instrs.append(Instr(name, op, rhs))
+        cur.shapes[name] = rhs.split(op + "(")[0] if op + "(" in rhs else rhs
+        if op == "while":
+            bm = re.search(r"body=%([\w.\-]+)", rhs)
+            cm = re.search(r"condition=%([\w.\-]+)", rhs)
+            if bm and cm:
+                cur.while_edges.append((bm.group(1), cm.group(1)))
+        elif op == "conditional":
+            # exclusive branches: charge the AVERAGE cost (branches of the
+            # gemma3 local/global pattern have near-identical dot counts)
+            branches = re.findall(
+                r"(?:true_computation|false_computation)=%([\w.\-]+)", rhs)
+            bg = re.search(r"branch_computations=\{([^}]*)\}", rhs)
+            if bg:
+                branches = re.findall(r"%([\w.\-]+)", bg.group(1))
+            if branches:
+                cur.branch_groups.append(branches)
+        else:
+            for cm in _CALLEE_RE.finditer(rhs):
+                cur.callees.append(cm.group(1))
+                if op in ("fusion", "reduce", "reduce-window", "scatter",
+                          "sort", "map", "select-and-scatter", "all-reduce",
+                          "reduce-scatter"):
+                    cur_fusion_internal.add(cm.group(1))
+    comps["__entry__"] = comps[entry]
+    comps["__entry__"].fusion_internal = cur_fusion_internal
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest s32 scalar constant in the condition computation ~ trip count."""
+    best = 1
+    for ins in cond.instrs:
+        for m in _CONST_RE.finditer(ins.rhs):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _operand_names(rhs: str) -> List[str]:
+    inner = rhs[rhs.index("("):] if "(" in rhs else rhs
+    return re.findall(r"%([\w.\-]+)", inner)
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    res = _shape_dims(ins.rhs.split(ins.op + "(")[0])
+    if not res:
+        return 0.0
+    _, rdims = res[0]
+    n_res = 1
+    for d in rdims:
+        n_res *= d
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rhs)
+    contract = 1
+    ops = _operand_names(ins.rhs)
+    if cm and ops:
+        lhs_type = comp.shapes.get(ops[0], "")
+        lhs_shapes = _shape_dims(lhs_type)
+        if lhs_shapes:
+            _, ldims = lhs_shapes[0]
+            for idx in (int(x) for x in cm.group(1).split(",") if x):
+                if idx < len(ldims):
+                    contract *= ldims[idx]
+    return 2.0 * n_res * contract
+
+
+def analyze(hlo: str) -> dict:
+    comps = parse_hlo(hlo)
+    entry = comps["__entry__"]
+
+    # per-computation local costs.  Instructions living inside fusion /
+    # reducer bodies are not materialized; their bytes are excluded (the
+    # fusion call's RESULT is counted at the call site).
+    fusion_internal = getattr(comps["__entry__"], "fusion_internal", set())
+    local = {}
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        flops = 0.0
+        coll = {k: {"count": 0, "bytes": 0.0, "bytes_tpu": 0.0}
+                for k in COLLECTIVE_OPS}
+        bytes_out = 0.0
+        transcend = 0.0
+        count_bytes = name not in fusion_internal
+        # TPU-equivalent collective accounting.  Two CPU-backend artifacts
+        # inflate the raw numbers (see EXPERIMENTS.md S.Roofline):
+        #  (1) CPU float-normalization promotes every bf16 collective to
+        #      f32 (bf16 collectives are native on TPU)   -> halve f32.
+        #  (2) the CPU pass pipeline lacks reduce-scatter-creator, so a
+        #      TPU reduce-scatter appears as all-reduce + partition-id
+        #      slice -> cost the sliced result, not the full buffer.
+        ar_slice_factor: Dict[str, float] = {}
+        for ins in comp.instrs:
+            if "partition-id" not in ins.rhs and "dynamic-slice" not in ins.rhs:
+                continue
+            ts = ins.rhs.split(ins.op + "(")[0] if ins.op + "(" in ins.rhs \
+                else ins.rhs
+            out_b = _nbytes(ts)
+            for o in _operand_names(ins.rhs):
+                src = comp.shapes.get(o, "")
+                if "all-reduce" in src or o.startswith("all-reduce"):
+                    in_b = _nbytes(src)
+                    if in_b > out_b > 0:
+                        ar_slice_factor[o] = out_b / in_b
+        for ins in comp.instrs:
+            type_str = ins.rhs.split(ins.op + "(")[0] if ins.op + "(" in ins.rhs \
+                else ins.rhs
+            if ins.op == "dot":
+                flops += _dot_flops(ins, comp)
+            base_op = ins.op.replace("-start", "")
+            if base_op in COLLECTIVE_OPS:
+                b = _nbytes(type_str)
+                b_tpu = b / 2 if type_str.strip().startswith("f32") else b
+                b_tpu *= ar_slice_factor.get(ins.name, 1.0)
+                coll[base_op]["count"] += 1
+                coll[base_op]["bytes"] += b
+                coll[base_op]["bytes_tpu"] += b_tpu
+            if ins.op in ("exponential", "tanh", "log", "rsqrt", "power"):
+                transcend += _nbytes(type_str) / 4.0
+            if not count_bytes:
+                continue
+            if ins.op not in _SKIP_BYTES_OPS and not ins.op.endswith("-done"):
+                if ins.op == "dynamic-update-slice":
+                    # in-place: traffic = the written slice, not the buffer
+                    ops_ = _operand_names(ins.rhs)
+                    upd = comp.shapes.get(ops_[1], "") if len(ops_) > 1 else ""
+                    bytes_out += 2.0 * _nbytes(upd)
+                else:
+                    bytes_out += _nbytes(type_str)
+        local[name] = (flops, coll, bytes_out, transcend)
+
+    # multiplicities via DFS from entry
+    mult: Dict[str, float] = defaultdict(float)
+
+    def visit(name: str, m: float, depth=0):
+        if depth > 64 or name not in comps:
+            return
+        mult[name] += m
+        comp = comps[name]
+        for body, cond in comp.while_edges:
+            t = _trip_count(comps[cond]) if cond in comps else 1
+            visit(body, m * t, depth + 1)
+            visit(cond, m * (t + 1), depth + 1)
+        for branches in comp.branch_groups:
+            for b in branches:
+                visit(b, m / max(len(branches), 1), depth + 1)
+        for callee in comp.callees:
+            visit(callee, m, depth + 1)
+
+    visit(entry.name, 1.0)
+
+    total = {"flops": 0.0, "bytes": 0.0, "transcendentals": 0.0,
+             "collectives": {k: {"count": 0.0, "bytes": 0.0, "bytes_tpu": 0.0}
+                             for k in COLLECTIVE_OPS},
+             "while_trip_counts": []}
+    for name, m in mult.items():
+        if name not in local:
+            continue
+        fl, coll, by, tr = local[name]
+        total["flops"] += m * fl
+        total["bytes"] += m * by
+        total["transcendentals"] += m * tr
+        for k, v in coll.items():
+            total["collectives"][k]["count"] += m * v["count"]
+            total["collectives"][k]["bytes"] += m * v["bytes"]
+            total["collectives"][k]["bytes_tpu"] += m * v["bytes_tpu"]
+    for name, comp in comps.items():
+        for body, cond in comp.while_edges:
+            if cond in comps:
+                total["while_trip_counts"].append(_trip_count(comps[cond]))
+    total["collective_bytes"] = sum(
+        v["bytes"] for v in total["collectives"].values())
+    total["collective_bytes_tpu"] = sum(
+        v["bytes_tpu"] for v in total["collectives"].values())
+    return total

@@ -1,0 +1,38 @@
+"""Serving launcher (continuous batching).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --smoke
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from ..configs import get_config, get_smoke_config
+from ..configs.base import ServeConfig
+from ..models import build_model
+from ..serve.engine import ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params,
+                      ServeConfig(max_batch=4, max_seq=128,
+                                  max_new_tokens=16))
+    rng = np.random.default_rng(0)
+    for _ in range(args.requests):
+        eng.submit(rng.integers(1, cfg.vocab_size, size=6).tolist())
+    done = eng.run_until_done()
+    print(f"served {len(done)} requests, "
+          f"{sum(len(r.out_tokens) for r in done)} tokens")
+
+
+if __name__ == "__main__":
+    main()

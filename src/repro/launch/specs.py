@@ -1,0 +1,212 @@
+"""ShapeDtypeStruct input specs + shardings for every (arch x shape) cell.
+
+No device allocation ever happens here - everything is abstract (eval_shape
++ NamedSharding), the pattern that makes the 512-device dry-run possible on
+a single-host CPU container.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import SHAPES, ModelConfig, ShapeSpec, TrainConfig
+from ..models import Model, build_model
+from ..sharding.rules import cache_spec, dp_axes, param_sharding_tree, tp_axis
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize(shardings, shapes, mesh):
+    """Drop PartitionSpec entries that do not evenly divide the dimension
+    (batch=1 decode, odd vocab sizes, head counts < mesh axis, ...).
+    pjit requires divisibility for explicit in_shardings."""
+    def fix(sh, spec_shape):
+        if not isinstance(sh, NamedSharding):
+            return sh
+        dims = spec_shape.shape
+        spec = list(sh.spec) + [None] * (len(dims) - len(sh.spec))
+        new = []
+        for d, entry in zip(dims, spec):
+            if entry is not None and d % _axis_size(mesh, entry) != 0:
+                entry = None
+            new.append(entry)
+        return NamedSharding(mesh, P(*new))
+
+    return jax.tree_util.tree_map(fix, shardings, shapes)
+
+
+# ---------------------------------------------------------------------------
+# batch specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Training / prefill batch ShapeDtypeStructs."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    batch = {}
+    if cfg.family == "vlm":
+        s_text = S - cfg.frontend_tokens
+        batch["tokens"] = sds((B, s_text), jnp.int32)
+        batch["vision_embeds"] = sds((B, cfg.frontend_tokens, cfg.d_model), dt)
+    elif cfg.family == "audio":
+        batch["tokens"] = sds((B, S), jnp.int32)
+        batch["audio_embeds"] = sds((B, S, cfg.d_model), dt)
+    else:
+        batch["tokens"] = sds((B, S), jnp.int32)
+    return batch
+
+
+def batch_shardings(cfg: ModelConfig, mesh) -> Dict[str, Any]:
+    names = tuple(mesh.axis_names)
+    dp = dp_axes(names)
+    out = {"tokens": NamedSharding(mesh, P(dp, None))}
+    if cfg.family == "vlm":
+        out["vision_embeds"] = NamedSharding(mesh, P(dp, None, None))
+    if cfg.family == "audio":
+        out["audio_embeds"] = NamedSharding(mesh, P(dp, None, None))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode specs (serve_step: one new token against a prefilled cache)
+# ---------------------------------------------------------------------------
+
+def decode_specs(model: Model, cfg: ModelConfig, shape: ShapeSpec):
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: model.init_cache(B, S, enc_len=S))
+    tokens = sds((B, 1), jnp.int32)
+    lens = sds((B,), jnp.int32)
+    return cache, tokens, lens
+
+
+def _cache_leaf_spec(path: str, leaf, names, *, seq_sharded: bool,
+                     seq_axis: str = "data"):
+    dp = dp_axes(names)
+    tp = tp_axis(names)
+    nd = len(leaf.shape)
+    if path.endswith(("k", "v")) and nd == 5:
+        # (L/A, B, S, Hkv, D) attention caches
+        return cache_spec(names, seq_sharded=seq_sharded, seq_axis=seq_axis)
+    if path.endswith("ssm") and nd == 5:      # (L, B, H, P, N)
+        return P(None, dp, tp, None, None)
+    if path.endswith("wkv") and nd == 5:      # (L, B, H, K, V)
+        return P(None, dp, tp, None, None)
+    if path.endswith("conv") and nd == 4:     # (L, B, k-1, d_in)
+        return P(None, dp, None, tp)
+    if nd == 3:                               # (L, B, D) rwkv shift states
+        return P(None, dp, None)
+    return P()
+
+
+def cache_shardings(cache, mesh, *, seq_sharded: bool,
+                    seq_axis: str = "data"):
+    names = tuple(mesh.axis_names)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        spec = _cache_leaf_spec(path, leaf, names, seq_sharded=seq_sharded,
+                                seq_axis=seq_axis)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# full cell assembly
+# ---------------------------------------------------------------------------
+
+def train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, tcfg: TrainConfig):
+    """Returns (step_fn, arg_specs, in_shardings) for a train_step cell."""
+    from ..train.train_step import (TrainState, init_train_state,
+                                    make_train_step)
+    model = build_model(cfg)
+    step = make_train_step(model, tcfg)
+    state_shape = jax.eval_shape(
+        lambda: init_train_state(model, jax.random.PRNGKey(0), tcfg))
+    pshard = param_sharding_tree(state_shape.params, mesh)
+    mshard = param_sharding_tree(state_shape.opt.m, mesh)
+    state_shard = TrainState(
+        params=pshard,
+        opt=type(state_shape.opt)(
+            step=NamedSharding(mesh, P()), m=mshard,
+            v=param_sharding_tree(state_shape.opt.v, mesh)),
+        ef=param_sharding_tree(state_shape.ef, mesh)
+        if tcfg.grad_compression else {})
+    bspecs = batch_specs(cfg, shape)
+    bshard = batch_shardings(cfg, mesh)
+    args = (state_shape, bspecs)
+    shardings = sanitize((state_shard, bshard), args, mesh)
+    return step, args, shardings
+
+
+def prefill_cell(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    from ..serve.serve_step import make_prefill_step
+    model = build_model(cfg)
+    step = make_prefill_step(model)
+    params_shape = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0)))
+    pshard = param_sharding_tree(params_shape, mesh)
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: model.init_cache(B, S, enc_len=S))
+    p_seq_sharded, p_seq_axis = _kv_seq_sharded(cfg, shape, mesh)
+    cshard = cache_shardings(cache, mesh, seq_sharded=p_seq_sharded,
+                             seq_axis=p_seq_axis)
+    bspecs = batch_specs(cfg, shape)
+    bshard = batch_shardings(cfg, mesh)
+    args = (params_shape, bspecs, cache)
+    shardings = sanitize((pshard, bshard, cshard), args, mesh)
+    return step, args, shardings
+
+
+def _kv_seq_sharded(cfg: ModelConfig, shape: ShapeSpec, mesh) -> bool:
+    """Shard the KV-cache SEQUENCE dimension when either (a) the batch is too
+    small for the data axis (batch-1 long-context decode) or (b) the KV head
+    count does not divide the model axis - otherwise the cache would be
+    REPLICATED across the model axis (e.g. llava decode: 68 GiB/device)."""
+    data_size = mesh.shape.get("data", 1)
+    model_size = mesh.shape.get("model", 1)
+    small_batch = shape.global_batch < data_size
+    kv_indivisible = cfg.n_kv_heads % model_size != 0
+    if small_batch:
+        return True, "data"
+    if kv_indivisible:
+        return True, "model"
+    return False, "data"
+
+
+def serve_cell(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """Decode cells: serve_step(params, cache, tokens, lens)."""
+    from ..serve.serve_step import make_serve_step
+    model = build_model(cfg)
+    names = tuple(mesh.axis_names)
+    data_size = mesh.shape.get("data", 1)
+    seq_sharded, seq_axis = _kv_seq_sharded(cfg, shape, mesh)
+    step = make_serve_step(model, seq_parallel=seq_sharded)
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pshard = param_sharding_tree(params_shape, mesh)
+    cache, tokens, lens = decode_specs(model, cfg, shape)
+    cshard = cache_shardings(cache, mesh, seq_sharded=seq_sharded,
+                             seq_axis=seq_axis)
+    dp = dp_axes(names) if shape.global_batch >= data_size else None
+    tshard = NamedSharding(mesh, P(dp, None))
+    lshard = NamedSharding(mesh, P(dp))
+    args = (params_shape, cache, tokens, lens)
+    shardings = sanitize((pshard, cshard, tshard, lshard), args, mesh)
+    return step, args, shardings

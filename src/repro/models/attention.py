@@ -1,0 +1,122 @@
+"""Attention module: MHA / GQA, RoPE, sliding-window, QK-norm, cross-attn,
+KV-cache decode (incl. sequence-parallel long-context decode)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from ..sharding import constrain
+from .layers import dense, dense_init, pdtype, rms_head_norm, rope
+
+
+def attn_init(key, cfg: ModelConfig):
+    dt = pdtype(cfg)
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    ks = jax.random.split(key, 6)
+    p = {"wq": dense_init(ks[0], d, nq, dt),
+         "wk": dense_init(ks[1], d, nkv, dt),
+         "wv": dense_init(ks[2], d, nkv, dt),
+         "wo": dense_init(ks[3], nq, d, dt, scale=1.0 / math.sqrt(nq))}
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def _qkv(params, x, cfg: ModelConfig, kv_x=None):
+    B = x.shape[0]
+    kv_src = x if kv_x is None else kv_x
+    q = dense(params["wq"], x).reshape(B, x.shape[1], cfg.n_heads, cfg.head_dim)
+    k = dense(params["wk"], kv_src).reshape(
+        B, kv_src.shape[1], cfg.n_kv_heads, cfg.head_dim)
+    v = dense(params["wv"], kv_src).reshape(
+        B, kv_src.shape[1], cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_head_norm(q, params["q_norm"])
+        k = rms_head_norm(k, params["k_norm"])
+    return q, k, v
+
+
+def attn_forward(params, x, cfg: ModelConfig, *, causal: bool = True,
+                 window: int = 0, positions: Optional[jax.Array] = None,
+                 kv_x: Optional[jax.Array] = None,
+                 impl: Optional[str] = None) -> jax.Array:
+    """Full-sequence attention (training / prefill).  x: (B, S, D)."""
+    q, k, v = _qkv(params, x, cfg, kv_x)
+    if cfg.use_rope and kv_x is None:
+        pos = positions if positions is not None \
+            else jnp.arange(x.shape[1])
+        q = rope(q, pos, cfg.rope_theta, cfg.rope_scaling)
+        k = rope(k, pos, cfg.rope_theta, cfg.rope_scaling)
+    q = constrain(q, "bshd")
+    # gather K/V across the sequence shards once, before the block scan
+    k = constrain(k, "kv_rep")
+    v = constrain(v, "kv_rep")
+    o = ops.flash_attention(q, k, v, causal=causal, window=window,
+                            logit_softcap=cfg.attn_logit_softcap, impl=impl)
+    o = constrain(o, "bshd")
+    B, S = x.shape[:2]
+    return dense(params["wo"], o.reshape(B, S, cfg.n_heads * cfg.head_dim))
+
+
+def attn_prefill(params, x, cfg: ModelConfig, cache_k, cache_v, *,
+                 window: int = 0, impl: Optional[str] = None):
+    """Prefill: run full attention AND fill the cache prefix.
+
+    cache_k/v: (B, S_max, Hkv, D).  Assumes prefill starts at position 0.
+    Returns (y, cache_k, cache_v)."""
+    q, k, v = _qkv(params, x, cfg)
+    S = x.shape[1]
+    if cfg.use_rope:
+        pos = jnp.arange(S)
+        q = rope(q, pos, cfg.rope_theta, cfg.rope_scaling)
+        k = rope(k, pos, cfg.rope_theta, cfg.rope_scaling)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, 0, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, 0, 0, 0))
+    o = ops.flash_attention(q, k, v, causal=True, window=window,
+                            logit_softcap=cfg.attn_logit_softcap, impl=impl)
+    B = x.shape[0]
+    y = dense(params["wo"], o.reshape(B, S, cfg.n_heads * cfg.head_dim))
+    return y, cache_k, cache_v
+
+
+def attn_decode(params, x, cfg: ModelConfig, cache_k, cache_v, lens, *,
+                window: int = 0, impl: Optional[str] = None,
+                seq_parallel: bool = False, cross: bool = False):
+    """Single-token decode.  x: (B, 1, D); cache: (B, S_max, Hkv, D);
+    lens: (B,) current lengths (the new token is written at lens).
+
+    cross=True: cross-attention - cache holds precomputed encoder K/V of
+    length `lens`; no cache update, no RoPE.
+    Returns (y, cache_k, cache_v)."""
+    B = x.shape[0]
+    q, k, v = _qkv(params, x, cfg)
+    if not cross:
+        if cfg.use_rope:
+            q = rope(q, lens[:, None], cfg.rope_theta, cfg.rope_scaling)
+            k = rope(k, lens[:, None], cfg.rope_theta, cfg.rope_scaling)
+        # scatter the new K/V at position `lens` per sequence
+        bidx = jnp.arange(B)
+        cache_k = cache_k.at[bidx, lens].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[bidx, lens].set(v[:, 0].astype(cache_v.dtype))
+        attend_len = lens + 1
+    else:
+        attend_len = lens
+
+    if seq_parallel:
+        # naive form: XLA SPMD partitions the softmax reductions over the
+        # seq-sharded cache (partial-softmax merge across chips)
+        o = ops.decode_attention_naive(q, cache_k, cache_v, attend_len)
+    else:
+        o = ops.flash_decode(q, cache_k, cache_v, attend_len, window=window,
+                             impl=impl)
+    y = dense(params["wo"], o.reshape(B, 1, cfg.n_heads * cfg.head_dim))
+    return y, cache_k, cache_v

@@ -1,0 +1,142 @@
+"""Mamba2 (SSD) block: gated selective state-space with depthwise conv.
+
+Decode state = (conv window buffer, SSM state h).  The chunked scan kernel
+(kernels/mamba2_scan.py) applies the paper's fusion principle to the
+attention-free chain: decay/inject/output stay VMEM-resident per chunk.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from ..sharding import constrain
+from .layers import dense, dense_init, pdtype
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads or max(1, d_in // 64)      # head channel P = 64
+    P = d_in // H
+    N = cfg.ssm_state
+    return d_in, H, P, N
+
+
+def mamba2_init(key, cfg: ModelConfig):
+    dt = pdtype(cfg)
+    d = cfg.d_model
+    d_in, H, P, N = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    # in_proj emits [z (d_in) | x (d_in) | B (N) | C (N) | dt (H)]
+    proj_out = 2 * d_in + 2 * N + H
+    p = {
+        "in_proj": dense_init(ks[0], d, proj_out, dt),
+        "out_proj": dense_init(ks[1], d_in, d, dt, scale=1.0 / math.sqrt(d_in)),
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm_conv, d_in), jnp.float32)
+                   * (1.0 / math.sqrt(cfg.ssm_conv))).astype(dt),
+        "A_log": jnp.zeros((H,), jnp.float32),           # A = exp(A_log) > 0
+        "dt_bias": jnp.full((H,), math.log(math.e - 1), jnp.float32),
+        "gate_norm": jnp.ones((d_in,), dt),
+    }
+    return p
+
+
+def _split(proj, cfg: ModelConfig):
+    d_in, H, P, N = _dims(cfg)
+    z = proj[..., :d_in]
+    x = proj[..., d_in:2 * d_in]
+    Bm = proj[..., 2 * d_in:2 * d_in + N]
+    Cm = proj[..., 2 * d_in + N:2 * d_in + 2 * N]
+    dt = proj[..., 2 * d_in + 2 * N:]
+    return z, x, Bm, Cm, dt
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv.  x: (B, S, C); w: (k, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1]].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _gated_out(params, y, z, cfg: ModelConfig):
+    d_in = y.shape[-1]
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+    yf = yf * params["gate_norm"].astype(jnp.float32)
+    return dense(params["out_proj"], yf.astype(y.dtype))
+
+
+def mamba2_forward(params, x, cfg: ModelConfig, impl=None):
+    """x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    d_in, H, P, N = _dims(cfg)
+    proj = dense(params["in_proj"], x)
+    z, xs, Bm, Cm, dt = _split(proj, cfg)
+    xs = jax.nn.silu(_causal_conv(xs, params["conv_w"]).astype(jnp.float32)
+                     ).astype(x.dtype)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = jnp.exp(params["A_log"])
+    xh = constrain(xs.reshape(B, S, H, P), "kv_rep")   # gather-once (D1)
+    dt = constrain(dt, "btd_rep")
+    Bm = constrain(Bm, "btd_rep")
+    Cm = constrain(Cm, "btd_rep")
+    y = ops.mamba2_scan(xh, dt, A, Bm, Cm, impl=impl)       # (B,S,H,P)
+    return _gated_out(params, y.reshape(B, S, d_in), z, cfg)
+
+
+def mamba2_prefill(params, x, cfg: ModelConfig, impl=None):
+    """Full-sequence prefill: (y, state) with the final SSM state and conv
+    window, so decode continues exactly where the prompt ended."""
+    from ..kernels import ref as kref
+    B, S, D = x.shape
+    d_in, H, P, N = _dims(cfg)
+    proj = dense(params["in_proj"], x)
+    z, xs, Bm, Cm, dt = _split(proj, cfg)
+    xs = jax.nn.silu(_causal_conv(xs, params["conv_w"]).astype(jnp.float32)
+                     ).astype(x.dtype)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = jnp.exp(params["A_log"])
+    xh = constrain(xs.reshape(B, S, H, P), "kv_rep")
+    y, h_fin = kref.mamba2_scan_chunked_state(
+        xh, constrain(dtf, "btd_rep"), A,
+        constrain(Bm, "btd_rep"), constrain(Cm, "btd_rep"))
+    out = _gated_out(params, y.reshape(B, S, d_in), z, cfg)
+    # conv window: last (ssm_conv-1) PRE-conv inputs
+    _, xs_raw, _, _, _ = _split(proj, cfg)
+    conv_win = xs_raw[:, S - (cfg.ssm_conv - 1):, :].astype(
+        jnp.dtype(cfg.dtype))
+    return out, {"conv": conv_win, "ssm": h_fin}
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int):
+    d_in, H, P, N = _dims(cfg)
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_in), jnp.dtype(cfg.dtype)),
+            "ssm": jnp.zeros((batch, H, P, N), jnp.float32)}
+
+
+def mamba2_decode(params, x, cfg: ModelConfig, state):
+    """x: (B, 1, D); returns (y (B,1,D), new_state)."""
+    B = x.shape[0]
+    d_in, H, P, N = _dims(cfg)
+    proj = dense(params["in_proj"], x)[:, 0]                 # (B, proj)
+    z, xs, Bm, Cm, dt = _split(proj, cfg)
+    # conv over the stored window + current input
+    win = jnp.concatenate([state["conv"], xs[:, None, :]], axis=1)  # (B,k,d_in)
+    w = params["conv_w"]
+    xc = jnp.sum(win.astype(jnp.float32) * w.astype(jnp.float32)[None], axis=1)
+    xc = jax.nn.silu(xc).astype(x.dtype)
+    new_conv = win[:, 1:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = jnp.exp(params["A_log"])
+    h, y = ops.mamba2_step(state["ssm"], xc.reshape(B, H, P), dt, A, Bm, Cm)
+    y = _gated_out(params, y.reshape(B, 1, d_in),
+                   z.reshape(B, 1, d_in), cfg)
+    return y, {"conv": new_conv, "ssm": h}

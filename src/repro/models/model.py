@@ -1,0 +1,252 @@
+"""Top-level language-model API: build_model(cfg) -> init / forward / loss /
+cache / prefill / decode_step, for every architecture family.
+
+Batch dict keys:
+  tokens        (B, S)  text / decoder tokens (int32)
+  vision_embeds (B, P, d_model)   [vlm stub frontend]
+  audio_embeds  (B, S_enc, d_model) [audio stub frontend]
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import constrain
+from . import transformer as T
+from .layers import (apply_norm, embed, embed_init, norm_init, pdtype,
+                     sinusoidal_positions, unembed)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    loss: Callable
+    init_cache: Callable
+    prefill: Callable
+    decode_step: Callable
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+
+    # ---------------- init -------------------------------------------------
+    def init(key):
+        k_emb, k_blocks = jax.random.split(key)
+        params: Dict[str, Any] = {"tok": embed_init(k_emb, cfg),
+                                  "final_norm": norm_init(cfg)}
+        if fam in ("dense", "moe", "vlm"):
+            params["blocks"] = T.stack_init(k_blocks, cfg)
+        elif fam == "hybrid":
+            params["blocks"] = T.hybrid_init(k_blocks, cfg)
+        elif fam == "ssm":
+            params["blocks"] = T.rwkv_init(k_blocks, cfg)
+        elif fam == "audio":
+            params["blocks"] = T.encdec_init(k_blocks, cfg)
+        else:
+            raise ValueError(f"unknown family {fam}")
+        return params
+
+    # ---------------- embedding helpers ------------------------------------
+    def _embed_tokens(params, tokens, offset: int = 0):
+        x = embed(params["tok"], tokens, cfg)
+        if not cfg.use_rope and not cfg.rwkv:
+            # sinusoidal absolute positions (OPT / whisper decoder)
+            pos = sinusoidal_positions(tokens.shape[1], cfg.d_model, offset)
+            x = x + pos[None].astype(x.dtype)
+        return x
+
+    def _assemble_input(params, batch):
+        x = _embed_tokens(params, batch["tokens"])
+        prefix = 0
+        if fam == "vlm" and "vision_embeds" in batch:
+            v = batch["vision_embeds"].astype(x.dtype)
+            x = jnp.concatenate([v, x], axis=1)
+            prefix = v.shape[1]
+        return x, prefix
+
+    # ---------------- forward ----------------------------------------------
+    def forward(params, batch, *, impl=None, remat=False):
+        """Returns (logits (B,S,V), aux_loss)."""
+        if fam == "audio":
+            enc = batch["audio_embeds"]
+            pos = sinusoidal_positions(enc.shape[1], cfg.d_model)
+            enc = enc + pos[None].astype(enc.dtype)
+            x_dec = _embed_tokens(params, batch["tokens"])
+            x, aux = T.encdec_forward(params["blocks"], enc, x_dec, cfg,
+                                      impl=impl, remat=remat)
+        else:
+            x, _prefix = _assemble_input(params, batch)
+            x = constrain(x, "btd")
+            if fam in ("dense", "moe", "vlm"):
+                x, aux = T.stack_forward(params["blocks"], x, cfg, impl=impl,
+                                         remat=remat)
+            elif fam == "hybrid":
+                x, aux = T.hybrid_forward(params["blocks"], x, cfg,
+                                          impl=impl, remat=remat)
+            else:
+                x, aux = T.rwkv_forward(params["blocks"], x, cfg, impl=impl,
+                                        remat=remat)
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = unembed(params["tok"], x, cfg)
+        logits = constrain(logits.astype(jnp.float32), "btv")
+        return logits, aux
+
+    # ---------------- loss --------------------------------------------------
+    def loss(params, batch, *, impl=None, remat=False, aux_weight=0.01):
+        logits, aux = forward(params, batch, impl=impl, remat=remat)
+        tokens = batch["tokens"]
+        labels = batch.get("labels", tokens)
+        prefix = 0
+        if fam == "vlm" and "vision_embeds" in batch:
+            prefix = batch["vision_embeds"].shape[1]
+            logits = logits[:, prefix:]
+        # next-token prediction
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
+        tgt = labels[:, 1:]
+        nll = -jnp.take_along_axis(lp, tgt[..., None], -1)[..., 0]
+        mask = batch.get("loss_mask")
+        if mask is not None:
+            mask = mask[:, 1:].astype(jnp.float32)
+            ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        else:
+            ce = jnp.mean(nll)
+        total = ce + aux_weight * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # ---------------- cache -------------------------------------------------
+    def init_cache(batch_size: int, max_len: int, enc_len: int = 0):
+        dt = pdtype(cfg)
+        if fam in ("dense", "moe", "vlm"):
+            L = cfg.n_layers
+            shp = (L, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim)
+            return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt)}
+        if fam == "hybrid":
+            return T.hybrid_init_cache(cfg, batch_size, max_len)
+        if fam == "ssm":
+            return T.rwkv_init_cache(cfg, batch_size, max_len)
+        if fam == "audio":
+            return T.encdec_init_cache(cfg, batch_size, max_len,
+                                       enc_len or max_len)
+        raise ValueError(fam)
+
+    # ---------------- prefill ------------------------------------------------
+    def prefill(params, batch, cache, *, impl=None):
+        """Fill the cache with the prompt; returns (last_logits, cache, lens)."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        if fam in ("dense", "moe", "vlm"):
+            x, prefix = _assemble_input(params, batch)
+            x, cache = T.stack_prefill(params["blocks"], x, cfg, cache,
+                                       impl=impl)
+            lens = jnp.full((B,), S + prefix, jnp.int32)
+        elif fam == "audio":
+            enc = batch["audio_embeds"]
+            pos = sinusoidal_positions(enc.shape[1], cfg.d_model)
+            enc_in = enc + pos[None].astype(enc.dtype)
+            x_dec = _embed_tokens(params, tokens)
+            x, cache = T.encdec_prefill(params["blocks"], enc_in, x_dec, cfg,
+                                        cache, impl=impl)
+            lens = jnp.full((B,), S, jnp.int32)
+        elif fam == "hybrid":
+            x, _ = _assemble_input(params, batch)
+            x, cache = T.hybrid_prefill(params["blocks"], x, cfg, cache,
+                                        impl=impl)
+            lens = jnp.full((B,), S, jnp.int32)
+        elif fam == "ssm":
+            x, _ = _assemble_input(params, batch)
+            x, cache = T.rwkv_prefill(params["blocks"], x, cfg, cache,
+                                      impl=impl)
+            lens = jnp.full((B,), S, jnp.int32)
+        else:
+            return _prefill_via_decode(params, batch, cache, impl=impl)
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = unembed(params["tok"], x[:, -1:], cfg)
+        return logits.astype(jnp.float32), cache, lens
+
+    def _fill_cross_cache(params, cache, enc_out):
+        from .layers import dense
+        dec = params["blocks"]["decoder"]
+        B, Se, _ = enc_out.shape
+
+        def body(_, xs):
+            p, ck, cv = xs
+            ca = p["cross_attn"]
+            k = dense(ca["wk"], enc_out).reshape(B, Se, cfg.n_kv_heads,
+                                                 cfg.head_dim)
+            v = dense(ca["wv"], enc_out).reshape(B, Se, cfg.n_kv_heads,
+                                                 cfg.head_dim)
+            return None, (k.astype(ck.dtype), v.astype(cv.dtype))
+
+        _, (ck, cv) = jax.lax.scan(body, None,
+                                   (dec, cache["cross_k"], cache["cross_v"]))
+        out = dict(cache)
+        out["cross_k"], out["cross_v"] = ck, cv
+        return out
+
+    def _prefill_via_decode(params, batch, cache, *, impl=None):
+        """Sequential prefill through decode_step (recurrent families and the
+        whisper decoder); exact, used at example/smoke scale."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+
+        def body(carry, t):
+            cache, lens, _ = carry
+            logits, cache = decode_step(params, tokens[:, t][:, None], lens,
+                                        cache, impl=impl)
+            return (cache, lens + 1, logits), None
+
+        B = tokens.shape[0]
+        dummy = jnp.zeros((B, 1, cfg.vocab_size), jnp.float32)
+        (cache, lens, logits), _ = jax.lax.scan(
+            body, (cache, jnp.zeros((B,), jnp.int32), dummy), jnp.arange(S))
+        return logits, cache, lens
+
+    # ---------------- decode -------------------------------------------------
+    def decode_step(params, tokens, lens, cache, *, impl=None,
+                    seq_parallel=False, enc_lens=None):
+        """tokens: (B,1); lens: (B,) positions to write.  Returns
+        (logits (B,1,V), new_cache)."""
+        if fam == "audio":
+            x = embed(params["tok"], tokens, cfg)
+            pos = jax.vmap(lambda l: sinusoidal_positions(1, cfg.d_model, 0)
+                           )(lens)  # position folded via rope-free decoder
+            x = x + jnp.take(sinusoidal_positions(cfg.max_seq if cfg.max_seq
+                                                  < 65536 else 65536,
+                                                  cfg.d_model),
+                             lens, axis=0)[:, None].astype(x.dtype)
+            el = enc_lens if enc_lens is not None \
+                else jnp.full_like(lens, cache["cross_k"].shape[2])
+            x, cache = T.encdec_decode(params["blocks"], x, cfg, cache, lens,
+                                       el, impl=impl,
+                                       seq_parallel=seq_parallel)
+        else:
+            x = embed(params["tok"], tokens, cfg)
+            if not cfg.use_rope and not cfg.rwkv:
+                tbl = sinusoidal_positions(65536, cfg.d_model)
+                x = x + jnp.take(tbl, jnp.minimum(lens, 65535),
+                                 axis=0)[:, None].astype(x.dtype)
+            if fam in ("dense", "moe", "vlm"):
+                x, cache = T.stack_decode(params["blocks"], x, cfg, cache,
+                                          lens, impl=impl,
+                                          seq_parallel=seq_parallel)
+            elif fam == "hybrid":
+                x, cache = T.hybrid_decode(params["blocks"], x, cfg, cache,
+                                           lens, impl=impl,
+                                           seq_parallel=seq_parallel)
+            else:
+                x, cache = T.rwkv_decode(params["blocks"], x, cfg, cache,
+                                         lens, impl=impl,
+                                         seq_parallel=seq_parallel)
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = unembed(params["tok"], x, cfg)
+        return logits.astype(jnp.float32), cache
+
+    return Model(cfg=cfg, init=init, forward=forward, loss=loss,
+                 init_cache=init_cache, prefill=prefill,
+                 decode_step=decode_step)

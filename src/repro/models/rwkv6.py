@@ -1,0 +1,145 @@
+"""RWKV6 (Finch) block: time-mix with data-dependent decay + channel-mix.
+
+Attention-free: the paper's attention-fusion schedule is inapplicable (see
+DESIGN.md S.Arch-applicability); the WKV recurrence kernel applies the same
+fusion principle instead (state stays VMEM-resident across the chunk).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from ..sharding import constrain
+from .layers import dense, dense_init, pdtype
+
+
+def rwkv6_init(key, cfg: ModelConfig):
+    dt = pdtype(cfg)
+    d = cfg.d_model
+    H = cfg.n_heads
+    K = d // H
+    ks = jax.random.split(key, 10)
+    lora = max(32, d // 32)
+    p = {
+        # time-mix
+        "r_proj": dense_init(ks[0], d, d, dt),
+        "k_proj": dense_init(ks[1], d, d, dt),
+        "v_proj": dense_init(ks[2], d, d, dt),
+        "g_proj": dense_init(ks[3], d, d, dt),
+        "out_proj": dense_init(ks[4], d, d, dt, scale=1.0 / math.sqrt(d)),
+        # data-dependent decay: w = exp(-exp(w_base + tanh(x @ w_a) @ w_b))
+        "w_base": jnp.full((d,), -1.0, jnp.float32),
+        "w_a": dense_init(ks[5], d, lora, dt),
+        "w_b": dense_init(ks[6], lora, d, dt, scale=0.01),
+        "u": (jax.random.normal(ks[7], (H, K), jnp.float32) * 0.1),
+        # token-shift interpolation weights per stream
+        "mix": (jnp.ones((5, d), jnp.float32) * 0.5).astype(dt),
+        "ln_x": jnp.ones((d,), dt),        # per-head group norm scale
+        # channel-mix
+        "cm_k": dense_init(ks[8], d, cfg.d_ff, dt),
+        "cm_v": dense_init(ks[9], cfg.d_ff, d, dt,
+                           scale=1.0 / math.sqrt(cfg.d_ff)),
+        "cm_mix": (jnp.ones((1, d), jnp.float32) * 0.5).astype(dt),
+    }
+    return p
+
+
+def _token_shift(x, x_prev_last=None):
+    """shifted[t] = x[t-1]; position 0 uses x_prev_last (decode carry)."""
+    B, S, D = x.shape
+    if x_prev_last is None:
+        first = jnp.zeros((B, 1, D), x.dtype)
+    else:
+        first = x_prev_last[:, None, :]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _mix(x, shifted, mu):
+    return x * mu.astype(x.dtype) + shifted * (1.0 - mu).astype(x.dtype)
+
+
+def _decay(params, xw):
+    wf = params["w_base"] + jnp.tanh(
+        dense(params["w_a"], xw).astype(jnp.float32)) @ \
+        params["w_b"].astype(jnp.float32)
+    # clamp so w >= exp(-exp(0.75)) ~= exp(-2.1): keeps the chunked kernel's
+    # cumulative-decay rescaling inside fp32 range (kernels/rwkv6_scan.py)
+    wf = jnp.clip(wf, -8.0, 0.75)
+    return jnp.exp(-jnp.exp(wf))            # in (0, 1)
+
+
+def _group_norm(y, scale, H):
+    """Per-head normalization of the WKV output.  y: (B, S, D)."""
+    B, S, D = y.shape
+    yh = y.reshape(B, S, H, D // H).astype(jnp.float32)
+    mean = jnp.mean(yh, -1, keepdims=True)
+    var = jnp.mean(jnp.square(yh - mean), -1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + 1e-5)
+    return (yh.reshape(B, S, D) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def rwkv6_time_mix(params, x, cfg: ModelConfig, x_prev=None, wkv_state=None,
+                   impl=None, return_state=False):
+    """x: (B,S,D).  Training/prefill when wkv_state is None; otherwise the
+    single-step decode path (S==1).  Returns (y, (x_last, new_state))."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    K = D // H
+    shifted = _token_shift(x, x_prev)
+    mu = params["mix"]
+    xr = _mix(x, shifted, mu[0])
+    xk = _mix(x, shifted, mu[1])
+    xv = _mix(x, shifted, mu[2])
+    xw = _mix(x, shifted, mu[3])
+    xg = _mix(x, shifted, mu[4])
+
+    r = dense(params["r_proj"], xr).reshape(B, S, H, K)
+    k = dense(params["k_proj"], xk).reshape(B, S, H, K)
+    v = dense(params["v_proj"], xv).reshape(B, S, H, K)
+    g = jax.nn.silu(dense(params["g_proj"], xg).astype(jnp.float32))
+    w = _decay(params, xw).reshape(B, S, H, K)
+
+    if wkv_state is None:
+        # gather the chunk streams across the sequence shards ONCE before
+        # the chunked scan (XLA otherwise re-gathers the stacked chunks on
+        # every scan iteration - measured 13.8 TiB/step; EXPERIMENTS.md D1)
+        r = constrain(r, "kv_rep")
+        k = constrain(k, "kv_rep")
+        v = constrain(v, "kv_rep")
+        w = constrain(w, "kv_rep")
+        if return_state:
+            from ..kernels import ref as kref
+            y, new_state = kref.rwkv6_scan_chunked_state(r, k, v, w,
+                                                         params["u"])
+        else:
+            y = ops.rwkv6_scan(r, k, v, w, params["u"], impl=impl)
+            new_state = None
+    else:
+        s_new, y1 = ops.rwkv6_step(wkv_state, r[:, 0], k[:, 0], v[:, 0],
+                                   w[:, 0], params["u"])
+        y = y1[:, None].reshape(B, S, H, K)
+        new_state = s_new
+    y = y.reshape(B, S, D)
+    y = _group_norm(y, params["ln_x"], H)
+    y = (y.astype(jnp.float32) * g).astype(x.dtype)
+    return dense(params["out_proj"], y), (x[:, -1], new_state)
+
+
+def rwkv6_channel_mix(params, x, cfg: ModelConfig, x_prev=None):
+    shifted = _token_shift(x, x_prev)
+    xk = _mix(x, shifted, params["cm_mix"][0])
+    h = jnp.square(jax.nn.relu(dense(params["cm_k"], xk).astype(jnp.float32)))
+    return dense(params["cm_v"], h.astype(x.dtype)), x[:, -1]
+
+
+def rwkv6_init_state(cfg: ModelConfig, batch: int):
+    H = cfg.n_heads
+    K = cfg.d_model // H
+    dt = jnp.dtype(cfg.dtype)
+    return {"wkv": jnp.zeros((batch, H, K, K), jnp.float32),
+            "tm_prev": jnp.zeros((batch, cfg.d_model), dt),
+            "cm_prev": jnp.zeros((batch, cfg.d_model), dt)}

@@ -1,0 +1,76 @@
+"""AdamW with global-norm clipping, built from scratch (no optax).
+
+Optimizer state is a pytree mirroring params (fp32 m, v), so the launch
+layer shards it with the same rules as the parameters (FSDP over "data").
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+    fstep = step.astype(jnp.float32)
+    bc1 = 1.0 - jnp.power(b1, fstep)
+    bc2 = 1.0 - jnp.power(b2, fstep)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m + (1.0 - b1) * gf
+        v_new = b2 * v + (1.0 - b2) * gf * gf
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+def cosine_schedule(step, *, base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1):
+    fstep = step.astype(jnp.float32)
+    warm = fstep / jnp.maximum(warmup, 1)
+    prog = jnp.clip((fstep - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * jnp.where(fstep < warmup, warm, cos)

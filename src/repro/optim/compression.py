@@ -1,0 +1,47 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 per-tensor quantization before the gradient all-reduce (4x bandwidth
+vs fp32, 2x vs bf16), with an error-feedback residual buffer so the
+quantization error is re-injected next step and training stays unbiased to
+first order.  The quantize->dequantize pair here is value-faithful to the
+wire format; on a real fleet the all-reduce itself runs on the int8 payload.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads, ef_buf):
+    """Returns (dequantized grads as seen after the int8 all-reduce,
+    new error-feedback buffer)."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, scale = _quantize_int8(gf)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), gf - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(ef_buf)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_e = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return new_g, new_e
+
+
+def compressed_bytes(params) -> int:
+    """Wire bytes per all-reduce with int8 payload (vs 4x for fp32)."""
+    return sum(int(p.size) + 4 for p in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,4 @@
+from .serve_step import make_prefill_step, make_serve_step, sample_token
+
+__all__ = ["make_prefill_step", "make_serve_step", "sample_token"]
+from .engine import Request, ServeEngine

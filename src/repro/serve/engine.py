@@ -1,0 +1,120 @@
+"""Continuous-batching serve engine.
+
+Slot-based scheduler: up to `max_batch` concurrent sequences share one
+batched KV cache; new requests are prefilled into free slots; every tick
+runs one batched decode step for all active slots; finished sequences free
+their slot immediately (no head-of-line blocking).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ServeConfig
+from ..models import Model, build_model
+from .serve_step import sample_token
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, scfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.scfg = scfg
+        cfg = model.cfg
+        B = scfg.max_batch
+        self.cache = model.init_cache(B, scfg.max_seq, enc_len=scfg.max_seq)
+        self.lens = jnp.zeros((B,), jnp.int32)
+        self.slots: List[Optional[Request]] = [None] * B
+        self.tokens = jnp.zeros((B, 1), jnp.int32)
+        self.queue: List[Request] = []
+        self._uid = 0
+
+        self._decode = jax.jit(
+            lambda p, c, t, l: model.decode_step(p, t, l, c))
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: List[int],
+               max_new_tokens: Optional[int] = None) -> int:
+        self._uid += 1
+        self.queue.append(Request(self._uid, list(prompt),
+                                  max_new_tokens or self.scfg.max_new_tokens))
+        return self._uid
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def _admit(self):
+        """Prefill queued requests into free slots, token by token (exact for
+        every architecture family, including recurrent state caches)."""
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            req = self.queue.pop(0)
+            lens = self.lens
+            cache = self.cache
+            last_logits = None
+            for t in req.prompt:
+                tok = self.tokens.at[slot, 0].set(t)
+                pos = lens
+                logits, cache = self._decode(self.params, cache, tok, pos)
+                lens = lens.at[slot].add(1)
+                last_logits = logits
+            self.cache, self.lens = cache, lens
+            nxt = int(sample_token(last_logits)[slot, 0]) \
+                if last_logits is not None else 0
+            req.out_tokens.append(nxt)
+            self.tokens = self.tokens.at[slot, 0].set(nxt)
+            self.slots[slot] = req
+
+    # ------------------------------------------------------------------
+    def tick(self) -> List[Request]:
+        """One engine iteration: admit + one batched decode step.
+        Returns requests that finished this tick."""
+        self._admit()
+        if not any(s is not None for s in self.slots):
+            return []
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self.tokens, self.lens)
+        next_tokens = sample_token(logits)
+        finished = []
+        new_tokens = self.tokens
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.lens = self.lens.at[i].add(1)
+            tok = int(next_tokens[i, 0])
+            req.out_tokens.append(tok)
+            new_tokens = new_tokens.at[i, 0].set(tok)
+            if len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                finished.append(req)
+                self.slots[i] = None
+                self.lens = self.lens.at[i].set(0)
+        self.tokens = new_tokens
+        return finished
+
+    def run_until_done(self, max_ticks: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_ticks):
+            done.extend(self.tick())
+            if not self.queue and all(s is None for s in self.slots):
+                break
+        return done

@@ -1,0 +1,40 @@
+"""Serving steps: batched single-token decode + chunked prefill."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import Model
+
+
+def make_serve_step(model: Model, *, seq_parallel: bool = False):
+    """serve_step(params, cache, tokens (B,1), lens (B,)) ->
+    (logits (B,1,V), new_cache).  One new token against the KV cache."""
+
+    def serve_step(params, cache, tokens, lens):
+        return model.decode_step(params, tokens, lens, cache,
+                                 seq_parallel=seq_parallel)
+
+    return serve_step
+
+
+def make_prefill_step(model: Model):
+    """prefill_step(params, batch, cache) -> (last_logits, cache, lens)."""
+
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    return prefill_step
+
+
+def sample_token(logits, *, temperature: float = 0.0,
+                 key: Optional[jax.Array] = None):
+    """logits: (B, 1, V) -> (B, 1) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    g = jax.random.gumbel(key, logits[:, -1].shape)
+    return jnp.argmax(logits[:, -1] / temperature + g, -1
+                      ).astype(jnp.int32)[:, None]

@@ -1,0 +1,6 @@
+from .train_step import TrainState, init_train_state, make_train_step
+
+__all__ = ["TrainState", "init_train_state", "make_train_step"]
+from .checkpoint import (all_checkpoints, latest_checkpoint,
+                         restore_checkpoint, restore_latest, save_checkpoint)
+from .trainer import Trainer

@@ -1,0 +1,164 @@
+"""Sharding-aware checkpointing with atomic writes and elastic restore.
+
+- save: flatten the state pytree to path-keyed arrays, write .npz to a tmp
+  file, fsync, atomic-rename, and record a manifest (step, digest, paths) -
+  a torn/partial checkpoint can never be mistaken for a valid one.
+- restore: rebuild the pytree and device_put each leaf with the shardings of
+  the *current* mesh - restoring a checkpoint onto a different mesh shape
+  (elastic scale-up/down) is just a different sharding tree.
+- retention: keep the last K valid checkpoints.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from ml_dtypes import bfloat16 as _bf16
+
+_STEP_RE = re.compile(r"step_(\d+)$")
+
+
+def _encode(arr: np.ndarray):
+    """npz cannot round-trip bfloat16; store as uint16 view + dtype tag."""
+    if arr.dtype == _bf16:
+        return arr.view(np.uint16), "bfloat16"
+    return arr, str(arr.dtype)
+
+
+def _decode(arr: np.ndarray, dtype_tag: str):
+    if dtype_tag == "bfloat16":
+        return arr.view(_bf16)
+    return arr
+
+
+def _flatten(tree) -> dict:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        out[path] = np.asarray(leaf)
+    return out
+
+
+def _digest(arrays: dict) -> str:
+    h = hashlib.sha256()
+    for k in sorted(arrays):
+        h.update(k.encode())
+        h.update(np.ascontiguousarray(arrays[k]).tobytes()[:1 << 20])
+    return h.hexdigest()[:16]
+
+
+def save_checkpoint(directory: str, step: int, state: Any,
+                    keep: int = 3) -> str:
+    d = Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    ck = d / f"step_{step}"
+    tmp = d / f".tmp_step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    arrays = _flatten(state)
+    encoded, dtypes = {}, {}
+    for k, v in arrays.items():
+        enc, tag = _encode(v)
+        encoded[k.replace("/", "|")] = enc
+        dtypes[k] = tag
+    npz_tmp = tmp / "arrays.npz"
+    with open(npz_tmp, "wb") as f:
+        np.savez(f, **encoded)
+        f.flush()
+        os.fsync(f.fileno())
+    manifest = {"step": step, "time": time.time(),
+                "digest": _digest(arrays),
+                "dtypes": dtypes,
+                "n_arrays": len(arrays)}
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if ck.exists():
+        shutil.rmtree(ck)
+    os.rename(tmp, ck)                      # atomic publish
+
+    # retention
+    steps = sorted(all_checkpoints(directory))
+    for s in steps[:-keep]:
+        shutil.rmtree(d / f"step_{s}", ignore_errors=True)
+    return str(ck)
+
+
+def all_checkpoints(directory: str):
+    d = Path(directory)
+    if not d.exists():
+        return []
+    out = []
+    for p in d.iterdir():
+        m = _STEP_RE.search(p.name)
+        if m and (p / "manifest.json").exists():
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_checkpoint(directory: str) -> Optional[int]:
+    steps = all_checkpoints(directory)
+    return steps[-1] if steps else None
+
+
+def _validate(ck: Path) -> bool:
+    try:
+        manifest = json.loads((ck / "manifest.json").read_text())
+        with np.load(ck / "arrays.npz") as z:
+            return len(z.files) == manifest["n_arrays"]
+    except Exception:
+        return False
+
+
+def restore_checkpoint(directory: str, step: int, state_template: Any,
+                       mesh=None, sharding_tree: Any = None) -> Tuple[Any, int]:
+    """Restore `step` into the structure of `state_template`, placing leaves
+    with `sharding_tree` (elastic: works for any current mesh)."""
+    ck = Path(directory) / f"step_{step}"
+    if not _validate(ck):
+        raise IOError(f"checkpoint {ck} failed validation")
+    manifest = json.loads((ck / "manifest.json").read_text())
+    dtypes = manifest.get("dtypes", {})
+    with np.load(ck / "arrays.npz") as z:
+        arrays = {k.replace("|", "/"):
+                  _decode(z[k], dtypes.get(k.replace("|", "/"), str(z[k].dtype)))
+                  for k in z.files}
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_template)
+    shard_flat = None
+    if sharding_tree is not None:
+        shard_flat = treedef.flatten_up_to(sharding_tree)
+    leaves = []
+    for i, (kp, leaf) in enumerate(flat):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        arr = arrays[path]
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        if shard_flat is not None:
+            leaves.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+def restore_latest(directory: str, state_template: Any, mesh=None,
+                   sharding_tree: Any = None) -> Optional[Tuple[Any, int]]:
+    """Restore the newest VALID checkpoint, skipping corrupt ones."""
+    for step in reversed(all_checkpoints(directory)):
+        try:
+            return restore_checkpoint(directory, step, state_template,
+                                      mesh=mesh, sharding_tree=sharding_tree)
+        except Exception:
+            continue
+    return None

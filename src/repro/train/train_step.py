@@ -1,0 +1,56 @@
+"""Training step: loss -> grad -> clip -> (compress) -> AdamW update.
+
+Pure function of (params, opt_state, batch, step) so the launch layer can
+jit it with explicit in/out shardings; gradients are averaged across the
+data axes implicitly by XLA's SPMD all-reduce (overlapped with the backward
+pass by the scheduler), optionally on an int8 payload with error feedback.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, TrainConfig
+from ..models import Model
+from ..optim import (AdamWState, adamw_init, adamw_update,
+                     clip_by_global_norm, compress_grads, cosine_schedule,
+                     ef_init)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    ef: Any              # error-feedback buffers ({} when compression off)
+
+
+def init_train_state(model: Model, key, tcfg: TrainConfig) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=adamw_init(params),
+                      ef=ef_init(params) if tcfg.grad_compression else {})
+
+
+def make_train_step(model: Model, tcfg: TrainConfig):
+    remat = tcfg.remat != "none"
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        def loss_fn(p):
+            return model.loss(p, batch, remat=remat)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        ef = state.ef
+        if tcfg.grad_compression == "int8":
+            grads, ef = compress_grads(grads, ef)
+        lr = cosine_schedule(state.opt.step, base_lr=tcfg.learning_rate,
+                             warmup=tcfg.warmup_steps, total=tcfg.total_steps)
+        new_params, new_opt = adamw_update(
+            grads, state.opt, state.params, lr=lr, b1=tcfg.b1, b2=tcfg.b2,
+            weight_decay=tcfg.weight_decay)
+        out = {"loss": loss, "ce": metrics["ce"], "aux": metrics["aux"],
+               "grad_norm": gnorm, "lr": lr}
+        return TrainState(new_params, new_opt, ef), out
+
+    return train_step

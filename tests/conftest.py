@@ -1,0 +1,24 @@
+import os
+import sys
+
+# smoke tests and benches must see 1 device (the dry-run sets its own flags
+# in-process before importing jax; see src/repro/launch/dryrun.py)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _isolate_mixed_dots_env():
+    """repro.launch.dryrun sets REPRO_MIXED_DOTS=1 at import (compile-only
+    native mixed-precision dots).  The CPU *runtime* cannot execute those, so
+    tests that actually run computations must not inherit the flag."""
+    os.environ.pop("REPRO_MIXED_DOTS", None)
+    yield
+    os.environ.pop("REPRO_MIXED_DOTS", None)

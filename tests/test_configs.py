@@ -1,0 +1,48 @@
+import pytest
+
+from repro.configs import (ARCH_MODULES, ASSIGNED_ARCHS, SHAPES, get_config,
+                           get_smoke_config)
+
+EXPECT_PARAMS_B = {
+    "llava-next-34b": (30, 40), "granite-3-2b": (2, 3.2), "gemma3-4b": (2.4, 4.4),
+    "granite-8b": (7, 9.5), "olmo-1b": (0.9, 1.5), "whisper-base": (0.05, 0.12),
+    "zamba2-2.7b": (1.8, 3.5), "qwen3-moe-235b-a22b": (200, 260),
+    "olmoe-1b-7b": (5.5, 8.5), "rwkv6-1.6b": (1.1, 2.0),
+    "opt-6.7b": (6, 7.4), "qwen-7b": (6.5, 8.5),
+}
+
+
+@pytest.mark.parametrize("arch", list(ARCH_MODULES))
+def test_config_loads_and_param_count(arch):
+    cfg = get_config(arch)
+    lo, hi = EXPECT_PARAMS_B[arch]
+    p = cfg.param_count() / 1e9
+    assert lo <= p <= hi, f"{arch}: {p:.2f}B outside [{lo},{hi}]"
+    assert cfg.n_heads % cfg.n_kv_heads == 0
+
+
+@pytest.mark.parametrize("arch", list(ARCH_MODULES))
+def test_smoke_config_is_reduced(arch):
+    full, smoke = get_config(arch), get_smoke_config(arch)
+    assert smoke.param_count() < full.param_count() / 100
+    assert smoke.family == full.family
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    active = cfg.active_param_count() / 1e9
+    assert 18 <= active <= 28, active     # ~22B active
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].kind == "train"
+    assert SHAPES["decode_32k"].is_decode
+    assert SHAPES["long_500k"].seq_len == 524_288
+    assert len(ASSIGNED_ARCHS) == 10
+
+
+def test_subquadratic_gating():
+    assert get_config("rwkv6-1.6b").subquadratic
+    assert get_config("zamba2-2.7b").subquadratic
+    assert not get_config("gemma3-4b").subquadratic   # 1-in-6 global layers
+    assert not get_config("granite-8b").subquadratic

@@ -1,0 +1,54 @@
+"""Unit tests for the corrected HLO static analyzer."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_cost import analyze, parse_hlo
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_dot_flops_exact():
+    r = analyze(_hlo(lambda a, b: a @ b, jnp.ones((64, 128)),
+                     jnp.ones((128, 256))))
+    assert r["flops"] == 2 * 64 * 128 * 256
+
+
+def test_scan_multiplies_by_trip_count():
+    def scanned(x, p):
+        return jax.lax.scan(lambda x, pl: (x @ pl, None), x, p)[0]
+    r = analyze(_hlo(scanned, jnp.ones((64, 64)), jnp.ones((8, 64, 64))))
+    assert r["flops"] == 8 * 2 * 64 ** 3
+    assert 8 in r["while_trip_counts"]
+
+
+def test_nested_scan():
+    def inner(x, p):
+        return jax.lax.scan(lambda x, pl: (x @ pl, None), x, p)[0]
+    def outer(x, p):
+        return jax.lax.scan(lambda x, ps: (inner(x, ps), None), x, p)[0]
+    r = analyze(_hlo(outer, jnp.ones((32, 32)), jnp.ones((3, 4, 32, 32))))
+    assert r["flops"] == 3 * 4 * 2 * 32 ** 3
+
+
+def test_conditional_branches_averaged():
+    def f(x, flag):
+        return jax.lax.cond(flag > 0, lambda: x @ x, lambda: x * 2.0)
+    r = analyze(_hlo(f, jnp.ones((64, 64)), jnp.array(1)))
+    assert r["flops"] == pytest.approx(0.5 * 2 * 64 ** 3)
+
+
+def test_grad_counts_fwd_and_bwd_dots():
+    def loss(a, b):
+        return jnp.sum((a @ b) ** 2)
+    r = analyze(_hlo(jax.grad(loss, argnums=(0, 1)),
+                     jnp.ones((32, 64)), jnp.ones((64, 16))))
+    # fwd dot + two transpose dots = 3x the base dot flops
+    assert r["flops"] == 3 * 2 * 32 * 64 * 16
+
+
+def test_parse_hlo_finds_entry():
+    comps = parse_hlo(_hlo(lambda x: x + 1.0, jnp.ones((4,))))
+    assert "__entry__" in comps

@@ -1,0 +1,107 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.flash_decode import flash_decode as fd_pallas
+
+
+def rand(key, *shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+CASES = [
+    # B, Sq, Skv, Hq, Hkv, D, causal, window, softcap
+    (1, 256, 256, 2, 2, 64, True, 0, 0.0),
+    (2, 256, 256, 4, 2, 64, True, 0, 0.0),        # GQA
+    (1, 256, 256, 2, 1, 128, False, 0, 0.0),      # non-causal
+    (1, 384, 384, 2, 2, 64, True, 128, 0.0),      # sliding window
+    (1, 256, 256, 2, 2, 64, True, 0, 30.0),       # softcap
+    (1, 200, 200, 2, 2, 64, True, 0, 0.0),        # padding
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_flash_vs_oracle(case, dtype, rng):
+    B, Sq, Skv, Hq, Hkv, D, causal, window, cap = case
+    ks = jax.random.split(rng, 3)
+    q = rand(ks[0], B, Sq, Hq, D, dtype=dtype)
+    k = rand(ks[1], B, Skv, Hkv, D, dtype=dtype)
+    v = rand(ks[2], B, Skv, Hkv, D, dtype=dtype)
+    o_p, lse = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   logit_softcap=cap, block_q=128,
+                                   block_kv=128)
+    o_n = ref.naive_attention(q, k, v, causal=causal, window=window,
+                              logit_softcap=cap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o_p, np.float32),
+                               np.asarray(o_n, np.float32), atol=tol)
+    assert bool(jnp.isfinite(lse).all())
+
+
+@pytest.mark.parametrize("S,window", [(1024, 0), (777, 0), (1024, 256)])
+def test_pallas_decode_vs_oracle(S, window, rng):
+    B, Hq, Hkv, D = 2, 4, 2, 64
+    ks = jax.random.split(rng, 3)
+    q = rand(ks[0], B, 1, Hq, D)
+    kc = rand(ks[1], B, S, Hkv, D)
+    vc = rand(ks[2], B, S, Hkv, D)
+    lens = jnp.array([S - 3, S // 2])
+    o_p = fd_pallas(q, kc, vc, lens, window=window)
+    o_r = ref.flash_decode(q, kc, vc, lens, window=window)
+    np.testing.assert_allclose(np.asarray(o_p, np.float32),
+                               np.asarray(o_r, np.float32), atol=2e-5)
+
+
+def test_flash_ref_vs_naive_long(rng):
+    ks = jax.random.split(rng, 3)
+    q = rand(ks[0], 1, 700, 4, 32)
+    k = rand(ks[1], 1, 700, 4, 32)
+    v = rand(ks[2], 1, 700, 4, 32)
+    o1 = ref.flash_attention(q, k, v, causal=True, block_kv=128)
+    o2 = ref.naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=3e-5)
+
+
+def test_custom_vjp_matches_autodiff(rng):
+    from repro.kernels import ops
+    B, S, Hq, Hkv, D = 2, 128, 4, 2, 32
+    ks = jax.random.split(rng, 3)
+    q = rand(ks[0], B, S, Hq, D, dtype=jnp.bfloat16)
+    k = rand(ks[1], B, S, Hkv, D, dtype=jnp.bfloat16)
+    v = rand(ks[2], B, S, Hkv, D, dtype=jnp.bfloat16)
+
+    def f_ours(q, k, v):
+        return jnp.sum(ops.flash_attention(q, k, v, causal=True)
+                       .astype(jnp.float32) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(ref.naive_attention(q, k, v, causal=True)
+                       .astype(jnp.float32) ** 2)
+
+    g1 = jax.grad(f_ours, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        a32, b32 = np.asarray(a, np.float32), np.asarray(b, np.float32)
+        assert np.abs(a32 - b32).max() / (np.abs(b32).max() + 1e-6) < 0.06
+
+
+def test_vjp_with_window_and_softcap(rng):
+    from repro.kernels import ops
+    ks = jax.random.split(rng, 3)
+    q = rand(ks[0], 1, 96, 2, 32)
+    k = rand(ks[1], 1, 96, 2, 32)
+    v = rand(ks[2], 1, 96, 2, 32)
+    for kw in ({"window": 32}, {"logit_softcap": 20.0}):
+        def f(q):
+            return jnp.sum(ops.flash_attention(q, k, v, causal=True, **kw)
+                           .astype(jnp.float32) ** 2)
+        def fr(q):
+            return jnp.sum(ref.naive_attention(q, k, v, causal=True, **kw)
+                           .astype(jnp.float32) ** 2)
+        g1, g2 = jax.grad(f)(q), jax.grad(fr)(q)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   atol=1e-3, rtol=2e-2)

@@ -1,0 +1,94 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.mamba2_scan import mamba2_scan as m2_pallas
+from repro.kernels.rwkv6_scan import rwkv6_scan as rw_pallas
+
+
+def _mk_mamba(rng, B=2, S=96, H=3, P=16, N=8):
+    ks = jax.random.split(rng, 4)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = jnp.abs(jax.random.normal(ks[2], (H,))) + 0.1
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(jax.random.fold_in(rng, 9), (B, S, N))
+    return x, dt, A, Bm, Cm
+
+
+def _mk_rwkv(rng, B=2, S=96, H=3, K=16):
+    ks = jax.random.split(rng, 5)
+    r = jax.random.normal(ks[0], (B, S, H, K))
+    k = jax.random.normal(ks[1], (B, S, H, K))
+    v = jax.random.normal(ks[2], (B, S, H, K))
+    w = jnp.exp(-jnp.exp(jnp.clip(jax.random.normal(ks[3], (B, S, H, K)),
+                                  -8, 0.75)))
+    u = jax.random.normal(ks[4], (H, K)) * 0.1
+    return r, k, v, w, u
+
+
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_mamba2_pallas_vs_naive(chunk, rng):
+    x, dt, A, Bm, Cm = _mk_mamba(rng)
+    y_p = m2_pallas(x, dt, A, Bm, Cm, chunk=chunk)
+    y_r = ref.mamba2_scan(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_r), atol=5e-4)
+
+
+def test_mamba2_chunked_vs_naive(rng):
+    x, dt, A, Bm, Cm = _mk_mamba(rng, S=100)
+    y_c = ref.mamba2_scan_chunked(x, dt, A, Bm, Cm, chunk=32)
+    y_r = ref.mamba2_scan(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_r), atol=5e-4)
+
+
+def test_mamba2_step_matches_scan(rng):
+    x, dt, A, Bm, Cm = _mk_mamba(rng, S=8)
+    y_scan = ref.mamba2_scan(x, dt, A, Bm, Cm)
+    B, S, H, P = x.shape
+    h = jnp.zeros((B, H, P, Bm.shape[-1]), jnp.float32)
+    ys = []
+    for t in range(S):
+        h, y = ref.mamba2_step(h, x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t])
+        ys.append(y)
+    y_step = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_scan),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_rwkv6_pallas_vs_naive(chunk, rng):
+    r, k, v, w, u = _mk_rwkv(rng)
+    y_p = rw_pallas(r, k, v, w, u, chunk=chunk)
+    y_r = ref.rwkv6_scan(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_r), atol=2e-3)
+
+
+def test_rwkv6_chunked_vs_naive(rng):
+    r, k, v, w, u = _mk_rwkv(rng, S=100)
+    y_c = ref.rwkv6_scan_chunked(r, k, v, w, u, chunk=32)
+    y_r = ref.rwkv6_scan(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_r), atol=2e-3)
+
+
+def test_rwkv6_step_matches_scan(rng):
+    r, k, v, w, u = _mk_rwkv(rng, S=8)
+    y_scan = ref.rwkv6_scan(r, k, v, w, u)
+    B, S, H, K = r.shape
+    st = jnp.zeros((B, H, K, K), jnp.float32)
+    ys = []
+    for t in range(S):
+        st, y = ref.rwkv6_step(st, r[:, t], k[:, t], v[:, t], w[:, t], u)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_scan), atol=1e-4)
+
+
+def test_scans_linear_in_v(rng):
+    """Both recurrences are linear in v: scan(2v) == 2 scan(v)."""
+    r, k, v, w, u = _mk_rwkv(rng, S=32)
+    y1 = ref.rwkv6_scan(r, k, 2.0 * v, w, u)
+    y2 = 2.0 * ref.rwkv6_scan(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)

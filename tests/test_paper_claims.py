@@ -1,0 +1,93 @@
+"""Validates the reproduction against the paper's published claims.
+
+Primary bands (abstract + Section V):
+  * energy reduction vs 2D-Unfused: 80.5%..93%
+  * energy saving vs advanced 2D fusion (FuseMax/Dual-SA): 54.2%..66.7%
+  * energy saving vs 3D-Base: ~46.8%
+  * speedups: 7.62x / 1.46x / 2.36x / 1.43x (2D-Unfused / 2D-Fused /
+    Dual-SA / 3D-Base)
+  * PE utilization ~87%
+  * Fig 1: fused-2D SRAM share > 60% of energy for N >= 2k
+  * Fig 6: ours cuts SRAM traffic ~76.6% vs fusion baselines
+"""
+import statistics as st
+
+import pytest
+
+from repro.core import DESIGNS, normalized_energy, simulate_attention, sweep
+from repro.core.simulator import data_movement, mean_utilization, speedups
+from repro.core.workloads import PAPER_SEQS, opt_6_7b, qwen_7b
+
+WLS = [m(s).attn for m in (opt_6_7b, qwen_7b) for s in PAPER_SEQS]
+
+
+@pytest.fixture(scope="module")
+def results():
+    return sweep(list(DESIGNS), WLS)
+
+
+def test_speedup_bands(results):
+    sp = speedups(results)
+    assert 6.8 <= sp["2D-Unfused"] <= 8.4, sp     # paper: 7.62
+    assert 1.30 <= sp["2D-Fused"] <= 1.62, sp     # paper: 1.46
+    assert 2.05 <= sp["Dual-SA"] <= 2.65, sp      # paper: 2.36
+    assert 1.28 <= sp["3D-Base"] <= 1.58, sp      # paper: 1.43
+
+
+def test_energy_reduction_vs_unfused(results):
+    ne = normalized_energy(results)
+    ours = list(ne["3D-Flow"].values())
+    # paper: every cell in [0.07, 0.195] (= 80.5%..93% reduction)
+    assert max(ours) <= 0.195, max(ours)
+    assert min(ours) >= 0.07, min(ours)
+    assert 0.10 <= st.mean(ours) <= 0.17
+
+
+def test_energy_vs_fusion_baselines(results):
+    ne = normalized_energy(results)
+    for d in ("2D-Fused", "Dual-SA"):
+        r = st.mean([ne["3D-Flow"][k] / ne[d][k] for k in ne[d]])
+        assert 0.333 <= r <= 0.47, (d, r)         # paper: 54.2-66.7% saving
+
+
+def test_energy_vs_3d_base(results):
+    ne = normalized_energy(results)
+    r = st.mean([ne["3D-Flow"][k] / ne["3D-Base"][k] for k in ne["3D-Base"]])
+    assert 0.45 <= r <= 0.62, r                   # paper: 46.8% saving
+
+
+def test_pe_utilization(results):
+    util = mean_utilization(results)
+    assert 0.82 <= util["3D-Flow"] <= 0.92        # paper: 87%
+    for d in DESIGNS:
+        if d != "3D-Flow":
+            assert util[d] < util["3D-Flow"]
+
+
+def test_fig1_sram_dominates_fused_2d():
+    for seq in (4096, 16384, 65536):
+        sh = simulate_attention("2D-Fused", opt_6_7b(seq).attn).energy.shares()
+        assert sh["SRAM"] > 0.60, (seq, sh["SRAM"])
+
+
+def test_fig6_data_movement(results):
+    dm = data_movement(results)
+    cut_fused = 1 - dm["3D-Flow"]["sram"] / dm["2D-Fused"]["sram"]
+    assert 0.70 <= cut_fused <= 0.85              # paper: 76.6%
+    # fused eliminates nearly all off-chip intermediate traffic
+    assert dm["2D-Fused"]["dram"] < 0.3 * dm["2D-Unfused"]["dram"]
+    # only 3D designs use vertical links
+    assert dm["3D-Flow"]["tsv"] > 0 and dm["2D-Fused"]["tsv"] == 0
+
+
+def test_table2_trends():
+    """Ours: memory-dominated breakdown; DRAM share falls with seq len."""
+    shares = {s: simulate_attention("3D-Flow", opt_6_7b(s).attn)
+              .energy.shares() for s in PAPER_SEQS}
+    for s, sh in shares.items():
+        mem = sh["SRAM"] + sh["DRAM"] + sh["Reg"]
+        assert mem > 0.5, (s, mem)                # memory access dominates
+        assert sh["MAC"] < 0.25
+        assert 0.03 <= sh["3D-IC"] <= 0.12        # paper: 5.3-10.1%
+    assert shares[65536]["DRAM"] < shares[1024]["DRAM"]
+    assert shares[65536]["Reg"] > shares[1024]["Reg"]

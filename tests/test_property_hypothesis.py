@@ -1,0 +1,106 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (balance_chain, balanced_ii, choose_block_config,
+                        is_bubble_free, threed_flash_schedule)
+from repro.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.lists(st.floats(0.1, 100.0), min_size=1, max_size=24),
+       st.integers(1, 6))
+def test_balance_chain_partitions_everything(costs, k):
+    groups, mx = balance_chain(costs, k)
+    flat = [i for g in groups for i in g]
+    assert flat == list(range(len(costs)))       # contiguous, complete
+    # max group cost equals reported II
+    gm = max((sum(costs[i] for i in g) for g in groups if g), default=0.0)
+    assert abs(gm - mx) < 1e-9
+    # balancing never exceeds the single-tier cost
+    assert mx <= sum(costs) + 1e-9
+
+
+@given(st.lists(st.floats(0.1, 100.0), min_size=2, max_size=16))
+def test_more_tiers_never_hurts(costs):
+    assert balanced_ii(costs, 4) <= balanced_ii(costs, 2) + 1e-9
+    assert balanced_ii(costs, 2) <= balanced_ii(costs, 1) + 1e-9
+
+
+@given(st.integers(5, 10), st.integers(7, 12))
+def test_block_config_fits_and_aligned(log_seq, log_d):
+    seq = 2 ** log_seq
+    d = min(2 ** (log_d - 4), 256)
+    bc = choose_block_config(d, seq)
+    assert bc.block_q % 128 == 0 and bc.block_kv % 128 == 0
+    assert bc.vmem_bytes <= 32 * 1024 * 1024
+
+
+def test_paper_schedule_is_bubble_free():
+    stages = threed_flash_schedule()
+    assert is_bubble_free(stages, 128)
+
+
+@given(st.integers(1, 4), st.integers(2, 5))
+@settings(max_examples=10)
+def test_causal_prefix_invariance(b, lh):
+    """Causal attention: outputs at position t do not depend on tokens > t."""
+    key = jax.random.PRNGKey(b * 7 + lh)
+    B, S, H, D = 1, 32, 2, 16
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    o_full = ref.flash_attention(q, k, v, causal=True, block_kv=16)
+    t = 10
+    o_pre = ref.flash_attention(q[:, :t], k[:, :t], v[:, :t], causal=True,
+                                block_kv=16)
+    np.testing.assert_allclose(np.asarray(o_full[:, :t]),
+                               np.asarray(o_pre), atol=2e-5)
+
+
+@given(st.integers(0, 5))
+@settings(max_examples=6)
+def test_gqa_equals_repeated_kv(seed):
+    key = jax.random.PRNGKey(seed)
+    B, S, Hq, Hkv, D = 1, 24, 4, 2, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    o_gqa = ref.flash_attention(q, k, v, causal=True, block_kv=8)
+    k_rep = jnp.repeat(k, Hq // Hkv, axis=2)
+    v_rep = jnp.repeat(v, Hq // Hkv, axis=2)
+    o_mha = ref.flash_attention(q, k_rep, v_rep, causal=True, block_kv=8)
+    np.testing.assert_allclose(np.asarray(o_gqa), np.asarray(o_mha),
+                               atol=2e-5)
+
+
+@given(st.integers(1, 8), st.integers(1, 4))
+@settings(max_examples=10)
+def test_partial_softmax_combine(n_parts, seed):
+    """Sharded partial-softmax merge == monolithic softmax attention."""
+    key = jax.random.PRNGKey(seed)
+    B, H, G, D, S = 1, 2, 1, 8, 8 * n_parts
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, 1, H * G, D))
+    kc = jax.random.normal(ks[1], (B, S, H, D))
+    vc = jax.random.normal(ks[2], (B, S, H, D))
+    from repro.kernels.ops import _decode_partials
+    parts = []
+    for i in range(n_parts):
+        sl = slice(i * 8, (i + 1) * 8)
+        parts.append(_decode_partials(q, kc[:, sl], vc[:, sl], 8))
+    m = jnp.stack([p[0] for p in parts])
+    l = jnp.stack([p[1] for p in parts])
+    o = jnp.stack([p[2] for p in parts])
+    mc, lc, oc = ref.combine_partial_softmax(m, l, o)
+    o_combined = oc / jnp.maximum(lc, 1e-20)[..., None]
+    o_ref = ref.flash_decode(q, kc, vc, S)
+    np.testing.assert_allclose(np.asarray(o_combined.reshape(o_ref.shape)),
+                               np.asarray(o_ref), atol=2e-5)

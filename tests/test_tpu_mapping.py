@@ -1,0 +1,32 @@
+"""Tests for the latency-balanced Pallas block chooser (the paper\'s
+scheduling criterion applied to MXU/VPU stage latencies)."""
+import pytest
+
+from repro.core.tpu_mapping import (BlockConfig, choose_block_config,
+                                    stage_latencies, vmem_working_set)
+
+
+@pytest.mark.parametrize("hd", [64, 128, 256])
+@pytest.mark.parametrize("seq", [2048, 32768])
+def test_chooser_returns_valid_config(hd, seq):
+    bc = choose_block_config(hd, seq)
+    assert bc.block_q % 128 == 0 and bc.block_kv % 128 == 0
+    assert bc.block_q <= max(seq, 128) and bc.block_kv <= max(seq, 128)
+    assert bc.vmem_bytes <= 32 * 1024 * 1024
+    assert bc.bubble_free            # DMA hidden under compute
+
+
+def test_stage_structure_mirrors_paper_tiers():
+    names = [n for n, _ in stage_latencies(256, 512, 128)]
+    assert names == ["qk", "rowmax", "expsum", "pv"]   # the 4 tiers
+
+
+def test_bigger_blocks_better_balance_for_small_heads():
+    """For small head_dim the VPU (exp) stage dominates; the chooser should
+    not pick degenerate tiny blocks."""
+    bc = choose_block_config(64, 8192)
+    assert bc.block_q * bc.block_kv >= 128 * 128
+
+
+def test_vmem_grows_with_blocks():
+    assert vmem_working_set(256, 512, 128) < vmem_working_set(512, 1024, 128)
