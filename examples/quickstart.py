@@ -1,6 +1,18 @@
 """Quickstart: build a model, train a few steps, generate tokens.
 
     PYTHONPATH=src python examples/quickstart.py [--arch granite-3-2b]
+
+Trains a smoke-scale model for a few steps (loss should fall), then serves
+two requests through the paged-KV ServeEngine (continuous batching; see
+docs/serving.md and examples/serve_lm.py for the full serving driver).
+
+Expected output shape:
+
+    == granite-3-2b-smoke: 0.07M params (dense) ==
+      step    4  loss 5.54  lr ...  ... ms
+      ...
+      request 1: generated [..., ..., ...]
+      request 2: generated [..., ..., ...]
 """
 import argparse
 import sys
@@ -39,7 +51,8 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     eng = ServeEngine(model, params,
-                      ServeConfig(max_batch=2, max_seq=96, max_new_tokens=8))
+                      ServeConfig(max_batch=2, max_seq=96, max_new_tokens=8,
+                                  paged=True, page_size=16))
     eng.submit([1, 2, 3, 4])
     eng.submit([5, 6, 7])
     for r in eng.run_until_done():

@@ -1,0 +1,78 @@
+"""JAX version-compat shims (0.4.x through 0.6+).
+
+The repo targets the current jax API (``jax.shard_map``, ``jax.set_mesh``,
+``jax.sharding.AxisType``, ``pltpu.CompilerParams``); older releases spell
+these differently or lack them.  Product code imports the shims from here so
+one import site owns the version probing.  Pallas-specific aliases live in
+``kernels/pallas_compat.py`` (kept separate so importing this module never
+pulls in Pallas).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types when the installed jax has them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """jax.shard_map with replication checking off (check_vma / check_rep)."""
+    smap = getattr(jax, "shard_map", None)
+    if smap is not None:
+        return smap(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_vma=False)
+    from jax.experimental.shard_map import shard_map as smap_old
+    return smap_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_rep=False)
+
+
+def use_mesh(mesh):
+    """Context manager activating `mesh` (jax.set_mesh, or `with mesh:`)."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    return mesh       # jax < 0.6: Mesh itself is the context manager
+
+
+def axis_size(name: str):
+    """Static size of a mapped axis inside shard_map.
+
+    jax.lax.axis_size is recent; psum of a Python literal constant-folds to
+    the axis size at trace time on every release, so it stays usable in
+    shape arithmetic."""
+    getter = getattr(jax.lax, "axis_size", None)
+    if getter is not None:
+        return getter(name)
+    return jax.lax.psum(1, name)
+
+
+@jax.custom_vjp
+def optimization_barrier(x):
+    """jax.lax.optimization_barrier with an explicit VJP.
+
+    Old jax releases have no differentiation rule for the barrier primitive;
+    wiring the rule ourselves also keeps the barrier on the COTANGENT, so the
+    backward pass gets the same hoisting protection as the forward.
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+def _barrier_fwd(x):
+    return optimization_barrier(x), None
+
+
+def _barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+optimization_barrier.defvjp(_barrier_fwd, _barrier_bwd)
+
+
+__all__ = ["axis_size", "make_mesh", "optimization_barrier", "shard_map",
+           "use_mesh"]

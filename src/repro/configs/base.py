@@ -168,6 +168,20 @@ class TrainConfig:
     log_every: int = 10
 
 
+def pages_for_tokens(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold n_tokens (ceil-div, >= 1).  THE page math -
+    ServeConfig, the model cache init, the allocator and the capacity
+    helpers all route through here."""
+    if page_size < 1:
+        raise ValueError(f"page_size must be >= 1, got {page_size}")
+    return max(1, -(-n_tokens // page_size))
+
+
+def dense_equivalent_pages(batch: int, max_len: int, page_size: int) -> int:
+    """Pool size matching dense capacity, plus the reserved null page 0."""
+    return batch * pages_for_tokens(max_len, page_size) + 1
+
+
 @dataclass(frozen=True)
 class ServeConfig:
     max_batch: int = 8
@@ -175,6 +189,23 @@ class ServeConfig:
     prefill_chunk: int = 512
     max_new_tokens: int = 64
     temperature: float = 0.0    # 0 = greedy
+
+    # --- paged KV cache (serve/paged_cache.py) ------------------------------
+    # paged=True stores K/V in a global page pool indexed through a block
+    # table instead of one dense (max_batch, max_seq) strip per slot; only
+    # attention families (dense / moe / vlm) support it.  max_seq must be a
+    # multiple of page_size (enforced by ServeEngine).
+    paged: bool = False
+    page_size: int = 16         # tokens per page (TPU wants >= 128 in prod)
+    num_pages: int = 0          # 0 = dense-equivalent capacity (+ null page)
+
+    def pages_per_seq(self) -> int:
+        return pages_for_tokens(self.max_seq, self.page_size)
+
+    def pool_pages(self) -> int:
+        """Actual pool size: configured, or dense-equivalent + null page."""
+        return self.num_pages or dense_equivalent_pages(
+            self.max_batch, self.max_seq, self.page_size)
 
 
 @dataclass(frozen=True)

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import CompilerParams
+
 LOG2E = 1.4426950408889634
 NEG_INF = -1e30
 
@@ -219,7 +221,7 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, causal: bool = True,
                                lambda b, h, i, j: (b, h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, Hq, Sqp, D), q.dtype),
         scratch_shapes=[pltpu.VMEM((block_q, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=_interpret(),
@@ -261,7 +263,7 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, causal: bool = True,
         ],
         scratch_shapes=[pltpu.VMEM((block_kv, D), jnp.float32),
                         pltpu.VMEM((block_kv, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=_interpret(),

@@ -5,6 +5,16 @@ Grid walks KV blocks sequentially per (batch, kv-head); the running
 the paper performs across tiers, here across KV blocks of a 32K-512K cache.
 The per-sequence valid length arrives via scalar-memory (SMEM) so masking
 is branch-free.
+
+Two cache layouts share the same online-softmax inner step:
+
+  flash_decode        dense (B, S_max, Hkv, D) caches - one contiguous
+                      KV strip per sequence.
+  paged_flash_decode  a global (P, page, Hkv, D) page pool shared by all
+                      sequences; each grid step gathers its page through a
+                      scalar-prefetched block table (SMEM), so the BlockSpec
+                      index map IS the page-table walk and the (m, l, acc)
+                      merge never leaves VMEM scratch.
 """
 from __future__ import annotations
 
@@ -17,12 +27,44 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import CompilerParams
+
 LOG2E = 1.4426950408889634
 NEG_INF = -1e30
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _online_softmax_step(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *,
+                         k_first, valid, window: int, scale: float):
+    """One KV-block update of the running (m, l, acc) triple in VMEM.
+
+    Shared by the dense and the paged decode kernels - only how the KV block
+    got into VMEM differs (contiguous BlockSpec walk vs block-table gather).
+    """
+    q = q_ref[0, 0].astype(jnp.float32) * scale              # (G, D)
+    k = k_ref[0].astype(jnp.float32)[:, 0]                   # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, bk)
+    pos = k_first + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = pos < valid
+    if window > 0:
+        mask = mask & (pos >= valid - window)
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.where(mask, jnp.exp2((s - m_safe) * LOG2E), 0.0)
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0,
+                      jnp.exp2((m_prev - m_new) * LOG2E))
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+    m_ref[...] = m_new
+    v = v_ref[0].astype(jnp.float32)[:, 0]                   # (bk, D)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
 
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
@@ -45,27 +87,9 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
 
     @pl.when(run)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, D)
-        k = k_ref[0].astype(jnp.float32)[:, 0]               # (bk, D)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32)  # (G,bk)
-        pos = k_first + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        mask = pos < valid
-        if window > 0:
-            mask = mask & (pos >= valid - window)
-        s = jnp.where(mask, s, NEG_INF)
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
-        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
-        p = jnp.where(mask, jnp.exp2((s - m_safe) * LOG2E), 0.0)
-        alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0,
-                          jnp.exp2((m_prev - m_new) * LOG2E))
-        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
-        m_ref[...] = m_new
-        v = v_ref[0].astype(jnp.float32)[:, 0]               # (bk, D)
-        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
-                                 preferred_element_type=jnp.float32)
-        acc_ref[...] = acc_ref[...] * alpha + pv
+        _online_softmax_step(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
+                             k_first=k_first, valid=valid, window=window,
+                             scale=scale)
 
     @pl.when(j == nk - 1)
     def _finalize():
@@ -113,8 +137,103 @@ def flash_decode(q, k_cache, v_cache, cache_len, *, window: int = 0,
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=_interpret(),
     )(cache_len, qg, kc, vc)
+    return o.reshape(B, 1, Hq, D)
+
+
+# ===========================================================================
+# paged decode: KV pages gathered through a scalar-prefetched block table
+# ===========================================================================
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, window: int, scale: float,
+                         page_size: int):
+    """bt_ref: (B, n_max) block table, len_ref: (B,) valid lengths - both
+    scalar-prefetched into SMEM; the k/v BlockSpec index maps already walked
+    the table, so k_ref/v_ref hold page j of THIS sequence."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    valid = len_ref[b]
+    k_first = j * page_size
+    run = k_first < valid
+    if window > 0:
+        run = run & (k_first + page_size > valid - window)
+
+    @pl.when(run)
+    def _compute():
+        _online_softmax_step(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
+                             k_first=k_first, valid=valid, window=window,
+                             scale=scale)
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale"))
+def paged_flash_decode(q, k_pages, v_pages, block_table, cache_len, *,
+                       window: int = 0,
+                       scale: Optional[float] = None) -> jax.Array:
+    """Decode against a paged KV cache.
+
+    q:           (B, 1, Hq, D)
+    k/v_pages:   (P, page_size, Hkv, D) global page pool (all sequences)
+    block_table: (B, n_max) int32 - page ids per sequence, position-major;
+                 unused entries must point at a valid page (the engine keeps
+                 page 0 as a never-allocated null page)
+    cache_len:   (B,) or scalar valid lengths
+    Returns (B, 1, Hq, D).
+    """
+    B, _, Hq, D = q.shape
+    ps, Hkv = k_pages.shape[1], k_pages.shape[2]
+    G = Hq // Hkv
+    n_max = block_table.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    if cache_len.ndim == 0:
+        cache_len = jnp.full((B,), cache_len, jnp.int32)
+    block_table = jnp.asarray(block_table, jnp.int32)
+
+    qg = q.reshape(B, Hkv, G, D)
+    kernel = functools.partial(_paged_decode_kernel, window=window,
+                               scale=scale, page_size=ps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,       # block table + lengths land in SMEM
+        grid=(B, Hkv, n_max),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, bt, cl: (b, h, 0, 0)),
+            # the index map IS the page-table walk: page j of sequence b
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, j, bt, cl: (bt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, j, bt, cl: (bt[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, j, bt, cl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    o = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=_interpret(),
+    )(block_table, cache_len, qg, k_pages, v_pages)
     return o.reshape(B, 1, Hq, D)

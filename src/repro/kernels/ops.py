@@ -187,6 +187,25 @@ def flash_decode(q, k_cache, v_cache, cache_len, *, window: int = 0,
                             scale=scale)
 
 
+def paged_flash_decode(q, k_pages, v_pages, block_table, cache_len, *,
+                       window: int = 0, scale: Optional[float] = None,
+                       impl: Optional[str] = None) -> jax.Array:
+    """Decode against a paged KV cache (vLLM-style block table).
+
+    q: (B,1,Hq,D); k_pages/v_pages: (P, page_size, Hkv, D) global page pool;
+    block_table: (B, n_max) int32 page ids; cache_len: (B,) valid lengths.
+    The Pallas path walks the block table from SMEM inside the BlockSpec
+    index maps, keeping the (m, l, acc) merge VMEM-resident; the ref path
+    gathers pages and reuses the chunked dense decode."""
+    impl = impl or default_impl()
+    if impl == "pallas":
+        from . import flash_decode as fd
+        return fd.paged_flash_decode(q, k_pages, v_pages, block_table,
+                                     cache_len, window=window, scale=scale)
+    return ref.paged_flash_decode(q, k_pages, v_pages, block_table,
+                                  cache_len, window=window, scale=scale)
+
+
 def decode_attention_naive(q, k_cache, v_cache, cache_len, *,
                            scale: Optional[float] = None) -> jax.Array:
     """Unchunked decode attention for SPMD sequence-parallel KV caches.

@@ -1,0 +1,11 @@
+"""Version-compat aliases for the Pallas TPU API surface.
+
+jax >= 0.6 renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+kernels import the alias from here so they lower on both API generations.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

@@ -193,6 +193,27 @@ def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return o.reshape(B, 1, Hq, D).astype(q.dtype)
 
 
+def paged_flash_decode(q, k_pages, v_pages, block_table, cache_len, *,
+                       scale: Optional[float] = None,
+                       window: int = 0) -> jax.Array:
+    """Decode against a paged KV cache (reference oracle).
+
+    q: (B, 1, Hq, D); k_pages/v_pages: (P, page_size, Hkv, D) global page
+    pool; block_table: (B, n_max) int32 page ids (position-major, unused
+    entries pointing at any valid page); cache_len: (B,) or scalar.
+
+    Gathers each sequence's pages into a contiguous strip and runs the
+    chunked dense decode - the ground truth the Pallas block-table kernel is
+    validated against, and the portable paged-serving path off-TPU.
+    """
+    B = q.shape[0]
+    _, page_size, Hkv, D = k_pages.shape
+    block_table = jnp.asarray(block_table, jnp.int32)
+    k = k_pages[block_table].reshape(B, -1, Hkv, D)
+    v = v_pages[block_table].reshape(B, -1, Hkv, D)
+    return flash_decode(q, k, v, cache_len, scale=scale, window=window)
+
+
 def combine_partial_softmax(m_parts, l_parts, o_parts):
     """Merge per-shard partial (m, l, o) triples - the distributed analogue
     of the paper's tier merge, used by sequence-parallel decode.

@@ -1,6 +1,13 @@
-"""Serving launcher (continuous batching).
+"""Serving launcher (continuous batching, dense or paged KV cache).
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --smoke
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --paged \
+        --page-size 16 --num-pages 64
+
+--paged serves through the paged KV cache (serve/paged_cache.py): a global
+page pool + block table instead of one dense (max_batch, max_seq) strip per
+slot.  --num-pages 0 sizes the pool to dense-equivalent capacity; smaller
+pools trade admission backpressure for KV memory.
 """
 import argparse
 
@@ -18,20 +25,31 @@ def main(argv=None):
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged KV cache")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="page pool size (0 = dense-equivalent)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(model, params,
-                      ServeConfig(max_batch=4, max_seq=128,
-                                  max_new_tokens=16))
+    scfg = ServeConfig(max_batch=args.max_batch, max_seq=args.max_seq,
+                       max_new_tokens=16, paged=args.paged,
+                       page_size=args.page_size, num_pages=args.num_pages)
+    eng = ServeEngine(model, params, scfg)
     rng = np.random.default_rng(0)
     for _ in range(args.requests):
         eng.submit(rng.integers(1, cfg.vocab_size, size=6).tolist())
     done = eng.run_until_done()
+    mode = f"paged (page={scfg.page_size}, pool={scfg.pool_pages()})" \
+        if args.paged else "dense"
     print(f"served {len(done)} requests, "
-          f"{sum(len(r.out_tokens) for r in done)} tokens")
+          f"{sum(len(r.out_tokens) for r in done)} tokens "
+          f"[{mode} KV cache, {eng.kv_cache_bytes() / 1e6:.2f} MB]")
 
 
 if __name__ == "__main__":

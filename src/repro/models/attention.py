@@ -88,6 +88,62 @@ def attn_prefill(params, x, cfg: ModelConfig, cache_k, cache_v, *,
     return y, cache_k, cache_v
 
 
+def attn_prefill_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
+                       page_ids, *, window: int = 0,
+                       impl: Optional[str] = None):
+    """Prefill one sequence's prompt into its KV pages.
+
+    x: (1, S, D) with S a multiple of the page size (pad the prompt
+    upstream; trailing pad K/V is masked by `lens` at decode time and gets
+    overwritten as decode advances).  k/v_pages: (P, page_size, Hkv, D)
+    global pool; page_ids: (S // page_size,) pages owned by this sequence,
+    position-major.  Returns (y, k_pages, v_pages)."""
+    q, k, v = _qkv(params, x, cfg)
+    S = x.shape[1]
+    page_size = k_pages.shape[1]
+    n = S // page_size
+    if cfg.use_rope:
+        pos = jnp.arange(S)
+        q = rope(q, pos, cfg.rope_theta, cfg.rope_scaling)
+        k = rope(k, pos, cfg.rope_theta, cfg.rope_scaling)
+    kp = k[0].reshape(n, page_size, cfg.n_kv_heads, cfg.head_dim)
+    vp = v[0].reshape(n, page_size, cfg.n_kv_heads, cfg.head_dim)
+    k_pages = k_pages.at[page_ids].set(kp.astype(k_pages.dtype))
+    v_pages = v_pages.at[page_ids].set(vp.astype(v_pages.dtype))
+    o = ops.flash_attention(q, k, v, causal=True, window=window,
+                            logit_softcap=cfg.attn_logit_softcap, impl=impl)
+    y = dense(params["wo"], o.reshape(1, S, cfg.n_heads * cfg.head_dim))
+    return y, k_pages, v_pages
+
+
+def attn_decode_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
+                      block_table, lens, *, window: int = 0,
+                      impl: Optional[str] = None):
+    """Single-token decode through the block table.
+
+    x: (B, 1, D); k/v_pages: (P, page_size, Hkv, D) global pool;
+    block_table: (B, n_max) page ids; lens: (B,) current lengths (the new
+    token's K/V is scattered into page lens // page_size at offset
+    lens % page_size).  Idle slots (lens == 0, block-table row zeroed) write
+    into the reserved null page 0, never into live pages.
+    Returns (y, k_pages, v_pages)."""
+    B = x.shape[0]
+    q, k, v = _qkv(params, x, cfg)
+    if cfg.use_rope:
+        q = rope(q, lens[:, None], cfg.rope_theta, cfg.rope_scaling)
+        k = rope(k, lens[:, None], cfg.rope_theta, cfg.rope_scaling)
+    page_size = k_pages.shape[1]
+    bidx = jnp.arange(B)
+    page = block_table[bidx, lens // page_size]
+    off = lens % page_size
+    k_pages = k_pages.at[page, off].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[page, off].set(v[:, 0].astype(v_pages.dtype))
+    o = ops.paged_flash_decode(q, k_pages, v_pages, block_table, lens + 1,
+                               window=window, impl=impl)
+    y = dense(params["wo"], o.reshape(B, 1, cfg.n_heads * cfg.head_dim))
+    return y, k_pages, v_pages
+
+
 def attn_decode(params, x, cfg: ModelConfig, cache_k, cache_v, lens, *,
                 window: int = 0, impl: Optional[str] = None,
                 seq_parallel: bool = False, cross: bool = False):

@@ -30,6 +30,9 @@ class Model:
     init_cache: Callable
     prefill: Callable
     decode_step: Callable
+    # paged KV-cache prompt prefill (attention families only; see
+    # serve/paged_cache.py for the host-side allocator)
+    prefill_paged: Optional[Callable] = None
 
 
 def build_model(cfg: ModelConfig) -> Model:
@@ -120,8 +123,27 @@ def build_model(cfg: ModelConfig) -> Model:
         return total, {"ce": ce, "aux": aux}
 
     # ---------------- cache -------------------------------------------------
-    def init_cache(batch_size: int, max_len: int, enc_len: int = 0):
+    def init_cache(batch_size: int, max_len: int, enc_len: int = 0, *,
+                   page_size: int = 0, num_pages: int = 0):
+        """Dense layout by default; page_size > 0 selects the paged layout:
+        a global (L, num_pages, page_size, Hkv, D) page pool shared by all
+        sequences plus a (batch, ceil(max_len/page_size)) block table.  Page
+        0 is reserved as the null page (see serve/paged_cache.py)."""
         dt = pdtype(cfg)
+        if page_size > 0:
+            if fam not in ("dense", "moe", "vlm"):
+                raise ValueError(
+                    f"paged KV cache needs an attention family, got {fam}")
+            from ..configs.base import dense_equivalent_pages, pages_for_tokens
+            L = cfg.n_layers
+            n_max = pages_for_tokens(max_len, page_size)
+            if num_pages <= 0:
+                num_pages = dense_equivalent_pages(batch_size, max_len,
+                                                   page_size)
+            shp = (L, num_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+            return {"k_pages": jnp.zeros(shp, dt),
+                    "v_pages": jnp.zeros(shp, dt),
+                    "block_table": jnp.zeros((batch_size, n_max), jnp.int32)}
         if fam in ("dense", "moe", "vlm"):
             L = cfg.n_layers
             shp = (L, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim)
@@ -165,8 +187,41 @@ def build_model(cfg: ModelConfig) -> Model:
             lens = jnp.full((B,), S, jnp.int32)
         else:
             return _prefill_via_decode(params, batch, cache, impl=impl)
+        # prompts padded to a bucketed length carry their real lengths in
+        # batch["true_lens"]; trailing pad K/V is masked by `lens` downstream
+        tl = batch.get("true_lens")
+        if tl is not None:
+            lens = jnp.asarray(tl, jnp.int32) + (lens - S)
         x = apply_norm(params["final_norm"], x, cfg)
-        logits = unembed(params["tok"], x[:, -1:], cfg)
+        x_last = x[:, -1:] if tl is None else \
+            jnp.take_along_axis(x, (lens - 1)[:, None, None], axis=1)
+        logits = unembed(params["tok"], x_last, cfg)
+        return logits.astype(jnp.float32), cache, lens
+
+    # ---------------- paged prefill -----------------------------------------
+    def prefill_paged(params, batch, cache, page_ids, *, impl=None):
+        """Prefill ONE sequence's prompt (B=1) into its KV pages.
+
+        batch: {"tokens": (1, S_pad), "true_lens": (1,) optional} with S_pad
+        a multiple of the page size; page_ids: (S_pad // page_size,) pages
+        owned by the sequence; cache: the paged layout from init_cache.
+        Returns (last_logits, cache, lens)."""
+        if fam not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                f"paged prefill needs an attention family, got {fam}")
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = _embed_tokens(params, tokens)
+        x = constrain(x, "btd")
+        x, cache = T.stack_prefill_paged(params["blocks"], x, cfg, cache,
+                                         page_ids, impl=impl)
+        tl = batch.get("true_lens")
+        lens = jnp.full((B,), S, jnp.int32) if tl is None \
+            else jnp.asarray(tl, jnp.int32)
+        x = apply_norm(params["final_norm"], x, cfg)
+        x_last = x[:, -1:] if tl is None else \
+            jnp.take_along_axis(x, (lens - 1)[:, None, None], axis=1)
+        logits = unembed(params["tok"], x_last, cfg)
         return logits.astype(jnp.float32), cache, lens
 
     def _fill_cross_cache(params, cache, enc_out):
@@ -232,9 +287,17 @@ def build_model(cfg: ModelConfig) -> Model:
                 x = x + jnp.take(tbl, jnp.minimum(lens, 65535),
                                  axis=0)[:, None].astype(x.dtype)
             if fam in ("dense", "moe", "vlm"):
-                x, cache = T.stack_decode(params["blocks"], x, cfg, cache,
-                                          lens, impl=impl,
-                                          seq_parallel=seq_parallel)
+                if "k_pages" in cache:
+                    if seq_parallel:
+                        raise ValueError(
+                            "paged decode does not compose with the "
+                            "sequence-parallel cache layout")
+                    x, cache = T.stack_decode_paged(params["blocks"], x, cfg,
+                                                    cache, lens, impl=impl)
+                else:
+                    x, cache = T.stack_decode(params["blocks"], x, cfg, cache,
+                                              lens, impl=impl,
+                                              seq_parallel=seq_parallel)
             elif fam == "hybrid":
                 x, cache = T.hybrid_decode(params["blocks"], x, cfg, cache,
                                            lens, impl=impl,
@@ -249,4 +312,6 @@ def build_model(cfg: ModelConfig) -> Model:
 
     return Model(cfg=cfg, init=init, forward=forward, loss=loss,
                  init_cache=init_cache, prefill=prefill,
-                 decode_step=decode_step)
+                 decode_step=decode_step,
+                 prefill_paged=prefill_paged
+                 if fam in ("dense", "moe", "vlm") else None)

@@ -50,7 +50,8 @@ def moe_ffn_a2a_local(params, x_local, cfg: ModelConfig, *,
     """
     B, S_l, D = x_local.shape
     E, K = cfg.moe_experts, cfg.moe_top_k
-    tp = jax.lax.axis_size(axis)
+    from ..compat import axis_size
+    tp = axis_size(axis)
     my = jax.lax.axis_index(axis)
     e_loc = E // tp
 
@@ -143,8 +144,8 @@ def make_sharded_moe(cfg: ModelConfig, mesh, *, axis: str = "model"):
     def fn(params, x):
         return moe_ffn_a2a_local(params, x, cfg, axis=axis)
 
-    return jax.shard_map(
+    from ..compat import shard_map
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(pspec, P(None, axis, None)),
-        out_specs=(P(None, axis, None), P()),
-        check_vma=False)
+        out_specs=(P(None, axis, None), P()))

@@ -21,9 +21,11 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..compat import optimization_barrier
 from ..configs.base import ModelConfig
 from ..sharding import constrain
-from .attention import attn_decode, attn_forward, attn_init, attn_prefill
+from .attention import (attn_decode, attn_decode_paged, attn_forward,
+                        attn_init, attn_prefill, attn_prefill_paged)
 from .layers import apply_norm, grad_cast, mlp, mlp_init, norm_init, pdtype
 from .mamba2 import (mamba2_decode, mamba2_forward, mamba2_init,
                      mamba2_init_state, mamba2_prefill)
@@ -97,6 +99,27 @@ def stack_init(key, cfg: ModelConfig):
     return _stack_trees(layers)
 
 
+def _windowed(cfg: ModelConfig, flag, attn_call):
+    """Run `attn_call(window)` under the gemma3 local:global per-layer cond
+    (window must be static for masking, so both paths live under lax.cond).
+    Shared by all four cache-walking stacks below."""
+    if cfg.sliding_window and cfg.global_every:
+        return jax.lax.cond(flag > 0,
+                            lambda: attn_call(0),
+                            lambda: attn_call(cfg.sliding_window))
+    return attn_call(cfg.sliding_window)
+
+
+def _ffn_tail(p, x, cfg: ModelConfig):
+    """Post-attention half of a block: norm -> (moe|mlp) -> residual."""
+    y_in = apply_norm(p["n2"], x, cfg)
+    if cfg.moe_experts:
+        y, _ = moe_ffn(p["moe"], y_in, cfg)
+    else:
+        y = mlp(p["mlp"], y_in, cfg)
+    return x + y
+
+
 def stack_forward(params, x, cfg: ModelConfig, *, impl=None, remat=False):
     flags = _layer_windows(cfg)
 
@@ -107,7 +130,7 @@ def stack_forward(params, x, cfg: ModelConfig, *, impl=None, remat=False):
         # hoists the first fp32 convert of the recompute into the save);
         # grad_cast: keep the residual COTANGENT bf16 so the per-layer
         # sequence-parallel all-gather/all-reduce pair moves half the bytes
-        x = grad_cast(jax.lax.optimization_barrier(x))
+        x = grad_cast(optimization_barrier(x))
         x = constrain(x, "btd")
         if cfg.sliding_window and cfg.global_every:
             x, a = jax.lax.cond(
@@ -135,25 +158,11 @@ def stack_prefill(params, x, cfg: ModelConfig, cache, *, impl=None):
         p, ck, cv, flag = xs
         x = constrain(x, "btd")
         h_in = apply_norm(p["n1"], x, cfg)
-        window = jnp.where(flag > 0, 0, cfg.sliding_window)
-        # window must be static for masking; run both paths under cond
-        if cfg.sliding_window and cfg.global_every:
-            h, ck, cv = jax.lax.cond(
-                flag > 0,
-                lambda: attn_prefill(p["attn"], h_in, cfg, ck, cv, window=0,
-                                     impl=impl),
-                lambda: attn_prefill(p["attn"], h_in, cfg, ck, cv,
-                                     window=cfg.sliding_window, impl=impl))
-        else:
-            h, ck, cv = attn_prefill(p["attn"], h_in, cfg, ck, cv,
-                                     window=cfg.sliding_window, impl=impl)
-        x = x + h
-        y_in = apply_norm(p["n2"], x, cfg)
-        if cfg.moe_experts:
-            y, _ = moe_ffn(p["moe"], y_in, cfg)
-        else:
-            y = mlp(p["mlp"], y_in, cfg)
-        return x + y, (ck, cv)
+        h, ck, cv = _windowed(
+            cfg, flag,
+            lambda w: attn_prefill(p["attn"], h_in, cfg, ck, cv, window=w,
+                                   impl=impl))
+        return _ffn_tail(p, x + h, cfg), (ck, cv)
 
     x, (ck, cv) = jax.lax.scan(body, x,
                                (params, cache["k"], cache["v"], flags))
@@ -167,30 +176,62 @@ def stack_decode(params, x, cfg: ModelConfig, cache, lens, *, impl=None,
     def body(x, xs):
         p, ck, cv, flag = xs
         h_in = apply_norm(p["n1"], x, cfg)
-        if cfg.sliding_window and cfg.global_every:
-            h, ck, cv = jax.lax.cond(
-                flag > 0,
-                lambda: attn_decode(p["attn"], h_in, cfg, ck, cv, lens,
-                                    window=0, impl=impl,
-                                    seq_parallel=seq_parallel),
-                lambda: attn_decode(p["attn"], h_in, cfg, ck, cv, lens,
-                                    window=cfg.sliding_window, impl=impl,
-                                    seq_parallel=seq_parallel))
-        else:
-            h, ck, cv = attn_decode(p["attn"], h_in, cfg, ck, cv, lens,
-                                    window=cfg.sliding_window, impl=impl,
-                                    seq_parallel=seq_parallel)
-        x = x + h
-        y_in = apply_norm(p["n2"], x, cfg)
-        if cfg.moe_experts:
-            y, _ = moe_ffn(p["moe"], y_in, cfg)
-        else:
-            y = mlp(p["mlp"], y_in, cfg)
-        return x + y, (ck, cv)
+        h, ck, cv = _windowed(
+            cfg, flag,
+            lambda w: attn_decode(p["attn"], h_in, cfg, ck, cv, lens,
+                                  window=w, impl=impl,
+                                  seq_parallel=seq_parallel))
+        return _ffn_tail(p, x + h, cfg), (ck, cv)
 
     x, (ck, cv) = jax.lax.scan(body, x,
                                (params, cache["k"], cache["v"], flags))
     return x, {"k": ck, "v": cv}
+
+
+def stack_prefill_paged(params, x, cfg: ModelConfig, cache, page_ids, *,
+                        impl=None):
+    """Paged prefill of ONE sequence (B=1), x: (1, S, D) with S a multiple
+    of the page size.  cache: {"k_pages"/"v_pages": (L, P, page, Hkv, D),
+    "block_table": (B, n_max)}; page_ids: (S // page,) pages owned by the
+    sequence.  The block table itself is host-managed (serve/paged_cache.py)
+    and passes through untouched."""
+    flags = _layer_windows(cfg)
+
+    def body(x, xs):
+        p, kp, vp, flag = xs
+        x = constrain(x, "btd")
+        h_in = apply_norm(p["n1"], x, cfg)
+        h, kp, vp = _windowed(
+            cfg, flag,
+            lambda w: attn_prefill_paged(p["attn"], h_in, cfg, kp, vp,
+                                         page_ids, window=w, impl=impl))
+        return _ffn_tail(p, x + h, cfg), (kp, vp)
+
+    x, (kp, vp) = jax.lax.scan(
+        body, x, (params, cache["k_pages"], cache["v_pages"], flags))
+    return x, {"k_pages": kp, "v_pages": vp,
+               "block_table": cache["block_table"]}
+
+
+def stack_decode_paged(params, x, cfg: ModelConfig, cache, lens, *,
+                       impl=None):
+    """Batched single-token decode through the block table (all layers share
+    one table; each layer owns its own page pool slab)."""
+    flags = _layer_windows(cfg)
+    bt = cache["block_table"]
+
+    def body(x, xs):
+        p, kp, vp, flag = xs
+        h_in = apply_norm(p["n1"], x, cfg)
+        h, kp, vp = _windowed(
+            cfg, flag,
+            lambda w: attn_decode_paged(p["attn"], h_in, cfg, kp, vp, bt,
+                                        lens, window=w, impl=impl))
+        return _ffn_tail(p, x + h, cfg), (kp, vp)
+
+    x, (kp, vp) = jax.lax.scan(
+        body, x, (params, cache["k_pages"], cache["v_pages"], flags))
+    return x, {"k_pages": kp, "v_pages": vp, "block_table": bt}
 
 
 # ===========================================================================
@@ -215,7 +256,7 @@ def hybrid_forward(params, x, cfg: ModelConfig, *, impl=None, remat=False):
 
     def body(x, xs):
         p, idx = xs
-        x = grad_cast(jax.lax.optimization_barrier(x))
+        x = grad_cast(optimization_barrier(x))
         x = constrain(x, "btd")
         x = x + mamba2_forward(p, x, cfg, impl=impl)
         if k:
@@ -337,7 +378,7 @@ def rwkv_init(key, cfg: ModelConfig):
 
 def rwkv_forward(params, x, cfg: ModelConfig, *, impl=None, remat=False):
     def body(x, p):
-        x = grad_cast(jax.lax.optimization_barrier(x))
+        x = grad_cast(optimization_barrier(x))
         x = constrain(x, "btd")
         h, _ = rwkv6_time_mix(p["mix"], apply_norm(p["n1"], x, cfg), cfg,
                               impl=impl)

@@ -1,4 +1,10 @@
-from .serve_step import make_prefill_step, make_serve_step, sample_token
-
-__all__ = ["make_prefill_step", "make_serve_step", "sample_token"]
 from .engine import Request, ServeEngine
+from .paged_cache import (OutOfPages, PageAllocator, dense_kv_bytes,
+                          paged_kv_bytes, pages_needed)
+from .serve_step import (make_paged_prefill_step, make_prefill_step,
+                         make_serve_step, sample_token)
+
+__all__ = ["OutOfPages", "PageAllocator", "Request", "ServeEngine",
+           "dense_kv_bytes", "make_paged_prefill_step", "make_prefill_step",
+           "make_serve_step", "paged_kv_bytes", "pages_needed",
+           "sample_token"]

@@ -1,9 +1,26 @@
-"""Continuous-batching serve engine.
+"""Continuous-batching serve engine (dense or paged KV cache).
 
 Slot-based scheduler: up to `max_batch` concurrent sequences share one
 batched KV cache; new requests are prefilled into free slots; every tick
 runs one batched decode step for all active slots; finished sequences free
 their slot immediately (no head-of-line blocking).
+
+Two cache modes (ServeConfig.paged):
+
+  dense  one (L, max_batch, max_seq, Hkv, D) strip per K and V - every slot
+         reserves max_seq worth of KV whether it needs it or not.
+  paged  a global page pool + block table (serve/paged_cache.py): a request
+         holds ceil((prompt + max_new) / page_size) pages from admission to
+         completion and returns them the tick it finishes, so mixed-length
+         traffic fits far more concurrent sequences in the same KV bytes.
+         Admission reserves the worst case up front; when the free list
+         cannot cover it the request simply stays queued (backpressure) -
+         nothing mid-flight can run out of pages.
+
+Prefill: attention families run one batched prefill over the (padded)
+prompt - real length travels in batch["true_lens"] so logits come from the
+last REAL token; recurrent families (ssm / hybrid / audio) keep the exact
+token-by-token path.
 """
 from __future__ import annotations
 
@@ -17,7 +34,13 @@ import numpy as np
 
 from ..configs.base import ModelConfig, ServeConfig
 from ..models import Model, build_model
-from .serve_step import sample_token
+from .paged_cache import PageAllocator, pages_needed
+from .serve_step import (make_paged_prefill_step, make_prefill_step,
+                         make_serve_step, sample_token)
+
+# attention-family prompts are padded to a multiple of this before the
+# batched prefill, bounding jit recompiles to one per bucket
+PREFILL_BUCKET = 16
 
 
 @dataclass
@@ -36,22 +59,59 @@ class ServeEngine:
         self.scfg = scfg
         cfg = model.cfg
         B = scfg.max_batch
-        self.cache = model.init_cache(B, scfg.max_seq, enc_len=scfg.max_seq)
+        self.paged = scfg.paged
+        self._attention_family = cfg.family in ("dense", "moe", "vlm")
+        if self.paged:
+            if model.prefill_paged is None:
+                raise ValueError(f"paged serving needs an attention family, "
+                                 f"got {cfg.family}")
+            if scfg.max_seq % scfg.page_size:
+                # the page-multiple invariant (attn_prefill_paged reshapes
+                # prompts into whole pages) must hold at the max_seq cap too
+                raise ValueError(
+                    f"max_seq ({scfg.max_seq}) must be a multiple of "
+                    f"page_size ({scfg.page_size})")
+            num_pages = scfg.pool_pages()
+            self.allocator = PageAllocator(num_pages, scfg.page_size, B,
+                                           scfg.max_seq)
+            self.cache = model.init_cache(B, scfg.max_seq,
+                                          page_size=scfg.page_size,
+                                          num_pages=num_pages)
+            self.peak_pages = 0
+        else:
+            self.allocator = None
+            self.cache = model.init_cache(B, scfg.max_seq,
+                                          enc_len=scfg.max_seq)
         self.lens = jnp.zeros((B,), jnp.int32)
         self.slots: List[Optional[Request]] = [None] * B
         self.tokens = jnp.zeros((B, 1), jnp.int32)
         self.queue: List[Request] = []
         self._uid = 0
 
-        self._decode = jax.jit(
-            lambda p, c, t, l: model.decode_step(p, t, l, c))
+        # donate the cache through the jit boundary so a tick updates the
+        # KV pool in place instead of transiently doubling it (donation is
+        # unimplemented on CPU - skip there to avoid per-call warnings)
+        def _jit_donating_cache(fn, cache_argnum):
+            if jax.default_backend() == "cpu":
+                return jax.jit(fn)
+            return jax.jit(fn, donate_argnums=(cache_argnum,))
+
+        self._decode = _jit_donating_cache(make_serve_step(model), 1)
+        self._prefill = _jit_donating_cache(make_prefill_step(model), 2)
+        if self.paged:
+            self._prefill_paged = _jit_donating_cache(
+                make_paged_prefill_step(model), 2)
 
     # ------------------------------------------------------------------
     def submit(self, prompt: List[int],
                max_new_tokens: Optional[int] = None) -> int:
+        n_new = max_new_tokens or self.scfg.max_new_tokens
+        if len(prompt) + n_new > self.scfg.max_seq:
+            raise ValueError(
+                f"request does not fit: {len(prompt)} prompt + {n_new} new "
+                f"tokens > max_seq {self.scfg.max_seq}")
         self._uid += 1
-        self.queue.append(Request(self._uid, list(prompt),
-                                  max_new_tokens or self.scfg.max_new_tokens))
+        self.queue.append(Request(self._uid, list(prompt), n_new))
         return self._uid
 
     def _free_slot(self) -> Optional[int]:
@@ -60,29 +120,114 @@ class ServeEngine:
                 return i
         return None
 
+    def kv_cache_bytes(self) -> int:
+        """Allocated cache bytes, every leaf: KV strips or pages, block
+        table, and recurrent state for ssm/hybrid/audio families.  Caches
+        are preallocated, so allocated == peak."""
+        return sum(int(np.prod(leaf.shape))
+                   * jnp.dtype(leaf.dtype).itemsize
+                   for leaf in jax.tree_util.tree_leaves(self.cache))
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
     def _admit(self):
-        """Prefill queued requests into free slots, token by token (exact for
-        every architecture family, including recurrent state caches)."""
+        """Prefill queued requests into free slots.  FIFO; stops at the
+        first request that cannot be placed (no slot, or - paged - not
+        enough free pages: backpressure, it stays queued)."""
         while self.queue:
             slot = self._free_slot()
             if slot is None:
                 return
-            req = self.queue.pop(0)
-            lens = self.lens
-            cache = self.cache
-            last_logits = None
-            for t in req.prompt:
-                tok = self.tokens.at[slot, 0].set(t)
-                pos = lens
-                logits, cache = self._decode(self.params, cache, tok, pos)
-                lens = lens.at[slot].add(1)
-                last_logits = logits
-            self.cache, self.lens = cache, lens
-            nxt = int(sample_token(last_logits)[slot, 0]) \
-                if last_logits is not None else 0
-            req.out_tokens.append(nxt)
-            self.tokens = self.tokens.at[slot, 0].set(nxt)
-            self.slots[slot] = req
+            if self.paged:
+                if not self._admit_paged(slot):
+                    return
+            elif self._attention_family:
+                self._admit_prefill(slot)
+            else:
+                self._admit_stepwise(slot)
+
+    def _padded_prompt(self, prompt: List[int], bucket: int):
+        s_real = len(prompt)
+        s_pad = min(-(-s_real // bucket) * bucket, self.scfg.max_seq)
+        toks = np.zeros((1, s_pad), np.int32)
+        toks[0, :s_real] = prompt
+        return jnp.asarray(toks), s_real
+
+    def _place(self, slot: int, req: Request, logits, s_real: int):
+        """Common tail of every admission path: record the slot state and
+        sample the first generated token from the prompt's last logits."""
+        self.lens = self.lens.at[slot].set(s_real)
+        nxt = int(sample_token(logits)[0, 0])
+        req.out_tokens.append(nxt)
+        self.tokens = self.tokens.at[slot, 0].set(nxt)
+        self.slots[slot] = req
+
+    def _admit_prefill(self, slot: int):
+        """Dense cache, attention family: one batched prefill into a
+        sub-cache sized to the padded prompt, scattered into the slot row."""
+        req = self.queue.pop(0)
+        toks, s_real = self._padded_prompt(req.prompt, PREFILL_BUCKET)
+        s_pad = toks.shape[1]
+        sub = self.model.init_cache(1, s_pad)
+        batch = {"tokens": toks, "true_lens": jnp.asarray([s_real])}
+        logits, sub, _ = self._prefill(self.params, batch, sub)
+        self.cache["k"] = self.cache["k"].at[:, slot, :s_pad].set(
+            sub["k"][:, 0])
+        self.cache["v"] = self.cache["v"].at[:, slot, :s_pad].set(
+            sub["v"][:, 0])
+        self._place(slot, req, logits, s_real)
+
+    def _admit_paged(self, slot: int) -> bool:
+        """Paged cache: reserve the request's worst case up front; prefill
+        the prompt straight into its pages.  False = out of pages."""
+        req = self.queue[0]
+        scfg = self.scfg
+        need = pages_needed(len(req.prompt) + req.max_new_tokens,
+                            scfg.page_size)
+        usable = min(self.allocator.max_pages_per_seq,
+                     self.allocator.num_pages - 1)
+        if need > usable:
+            # backpressure cannot help a reservation larger than the whole
+            # pool (or than max_seq) - fail fast instead of queueing forever
+            raise ValueError(
+                f"request {req.uid} needs {need} pages; the engine can "
+                f"grant at most {usable} (pool {self.allocator.num_pages}, "
+                f"max_seq {self.scfg.max_seq}, page {self.scfg.page_size})")
+        if not self.allocator.can_alloc(need):
+            return False
+        self.queue.pop(0)
+        pages = self.allocator.alloc(slot, need)
+        self.peak_pages = max(self.peak_pages, self.allocator.used_pages)
+        toks, s_real = self._padded_prompt(req.prompt, scfg.page_size)
+        page_ids = jnp.asarray(pages[:toks.shape[1] // scfg.page_size],
+                               jnp.int32)
+        self.cache["block_table"] = self.allocator.table_device()
+        batch = {"tokens": toks, "true_lens": jnp.asarray([s_real])}
+        logits, self.cache, _ = self._prefill_paged(
+            self.params, batch, self.cache, page_ids)
+        self._place(slot, req, logits, s_real)
+        return True
+
+    def _admit_stepwise(self, slot: int):
+        """Token-by-token prefill through decode_step (exact for every
+        architecture family, including recurrent state caches)."""
+        req = self.queue.pop(0)
+        lens = self.lens
+        cache = self.cache
+        last_logits = None
+        for t in req.prompt:
+            tok = self.tokens.at[slot, 0].set(t)
+            pos = lens
+            logits, cache = self._decode(self.params, cache, tok, pos)
+            lens = lens.at[slot].add(1)
+            last_logits = logits
+        self.cache, self.lens = cache, lens
+        nxt = int(sample_token(last_logits)[slot, 0]) \
+            if last_logits is not None else 0
+        req.out_tokens.append(nxt)
+        self.tokens = self.tokens.at[slot, 0].set(nxt)
+        self.slots[slot] = req
 
     # ------------------------------------------------------------------
     def tick(self) -> List[Request]:
@@ -108,6 +253,11 @@ class ServeEngine:
                 finished.append(req)
                 self.slots[i] = None
                 self.lens = self.lens.at[i].set(0)
+                if self.paged:
+                    # pages go back to the pool the tick the request ends
+                    self.allocator.free_slot(i)
+        if finished and self.paged:
+            self.cache["block_table"] = self.allocator.table_device()
         self.tokens = new_tokens
         return finished
 

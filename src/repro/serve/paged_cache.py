@@ -1,0 +1,115 @@
+"""Paged KV-cache bookkeeping: fixed-size pages, a free list, block tables.
+
+The device side is a global page pool per layer - (num_pages, page_size,
+Hkv, D) slabs shared by every sequence (see models/model.py init_cache) -
+plus one (max_batch, max_pages_per_seq) int32 block table.  This module owns
+the HOST side: which pages are free, which belong to which slot, and the
+numpy mirror of the block table.  All methods are O(pages moved); nothing
+here touches jax except the tiny block-table upload.
+
+Page 0 is the reserved NULL page.  Block-table rows of idle slots point at
+it, so the batched decode step's masked K/V writes from inactive lanes land
+in a page no live sequence owns (reads are masked by `lens` anyway).  Usable
+capacity is therefore ``num_pages - 1`` pages.
+
+Capacity math (see docs/serving.md): a request of P prompt tokens with N
+generation budget holds ceil((P + N) / page_size) pages from admission to
+completion, vs. a dense slot's ceil(max_seq / page_size).  With mixed
+request lengths the pool can be sized well below max_batch * max_seq and
+still never reject mid-flight: admission reserves the worst case up front,
+so the only backpressure point is `can_alloc` at admit time.
+"""
+from __future__ import annotations
+
+import math
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import (ModelConfig, ServeConfig, dense_equivalent_pages,
+                            pages_for_tokens)
+
+# canonical page math lives in configs.base; re-exported under the serving
+# vocabulary ("how many pages does this request need")
+pages_needed = pages_for_tokens
+
+
+def dense_kv_bytes(cfg: ModelConfig, scfg: ServeConfig) -> int:
+    """Bytes of the dense (L, max_batch, max_seq, Hkv, D) K+V cache."""
+    dt = jnp.dtype(cfg.dtype).itemsize
+    return (2 * cfg.n_layers * scfg.max_batch * scfg.max_seq
+            * cfg.n_kv_heads * cfg.head_dim * dt)
+
+
+def paged_kv_bytes(cfg: ModelConfig, scfg: ServeConfig,
+                   num_pages: int = 0) -> int:
+    """Bytes of the paged (L, num_pages, page_size, Hkv, D) K+V pool."""
+    if num_pages <= 0:
+        num_pages = dense_equivalent_pages(scfg.max_batch, scfg.max_seq,
+                                           scfg.page_size)
+    dt = jnp.dtype(cfg.dtype).itemsize
+    return (2 * cfg.n_layers * num_pages * scfg.page_size
+            * cfg.n_kv_heads * cfg.head_dim * dt)
+
+
+class OutOfPages(RuntimeError):
+    """Raised by alloc() when the free list cannot cover a reservation."""
+
+
+class PageAllocator:
+    """Free-list page allocator + per-slot page lists + block-table mirror."""
+
+    def __init__(self, num_pages: int, page_size: int, max_batch: int,
+                 max_seq: int):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if num_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is the null page)")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_pages_per_seq = pages_needed(max_seq, page_size)
+        # LIFO free list; page 0 stays reserved forever
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._slot_pages: List[List[int]] = [[] for _ in range(max_batch)]
+        self.table = np.zeros((max_batch, self.max_pages_per_seq), np.int32)
+
+    # -- queries ----------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def slot_pages(self, slot: int) -> List[int]:
+        return list(self._slot_pages[slot])
+
+    # -- mutation ---------------------------------------------------------
+    def alloc(self, slot: int, n: int) -> List[int]:
+        """Append n pages to `slot`; returns the slot's FULL page list."""
+        if n > len(self._free):
+            raise OutOfPages(f"want {n} pages, {len(self._free)} free")
+        owned = self._slot_pages[slot]
+        if len(owned) + n > self.max_pages_per_seq:
+            raise ValueError(f"slot {slot} would exceed max_seq "
+                             f"({len(owned)} + {n} pages)")
+        take = [self._free.pop() for _ in range(n)]
+        self.table[slot, len(owned):len(owned) + n] = take
+        owned.extend(take)
+        return list(owned)
+
+    def free_slot(self, slot: int):
+        """Return all of `slot`'s pages to the pool and null its table row."""
+        self._free.extend(reversed(self._slot_pages[slot]))
+        self._slot_pages[slot] = []
+        self.table[slot, :] = 0
+
+    def table_device(self) -> jnp.ndarray:
+        """The block table as a device array (upload is max_batch * n_max
+        int32s - trivial next to one decode step)."""
+        return jnp.asarray(self.table)

@@ -1,4 +1,9 @@
-"""Serving steps: batched single-token decode + chunked prefill."""
+"""Serving steps: batched single-token decode + (dense or paged) prefill.
+
+The decode step is cache-layout agnostic: pass the dense {"k","v"} cache or
+the paged {"k_pages","v_pages","block_table"} cache and decode_step routes
+to the matching kernel (kernels/flash_decode.py).
+"""
 from __future__ import annotations
 
 from typing import Dict, Optional, Tuple
@@ -28,6 +33,18 @@ def make_prefill_step(model: Model):
         return model.prefill(params, batch, cache)
 
     return prefill_step
+
+
+def make_paged_prefill_step(model: Model):
+    """paged_prefill_step(params, batch, cache, page_ids) ->
+    (last_logits, cache, lens).  batch["tokens"]: (1, S_pad) prompt padded
+    to a page multiple, real length in batch["true_lens"]; page_ids:
+    (S_pad // page_size,) pages owned by the sequence (PageAllocator)."""
+
+    def paged_prefill_step(params, batch, cache, page_ids):
+        return model.prefill_paged(params, batch, cache, page_ids)
+
+    return paged_prefill_step
 
 
 def sample_token(logits, *, temperature: float = 0.0,

@@ -18,9 +18,38 @@ import jax
 from jax.sharding import PartitionSpec as P
 
 
+def _active_mesh():
+    """The mesh currently in scope, or None.
+
+    jax >= 0.5 exposes jax.sharding.get_abstract_mesh(); on older releases
+    fall back to the physical mesh bound by `with mesh:` (thread_resources).
+    """
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        return getter()
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        return m if m.axis_names else None
+    except Exception:
+        return None
+
+
+def _mesh_axis_size(mesh, name: str) -> int:
+    shape = mesh.shape
+    if hasattr(shape, "get"):
+        return shape.get(name, 1)
+    return dict(zip(mesh.axis_names, shape.values())).get(name, 1)
+
+
 def _axis_names() -> Tuple[str, ...]:
-    m = jax.sharding.get_abstract_mesh()
+    m = _active_mesh()
     return tuple(m.axis_names) if m is not None and m.axis_names else ()
+
+
+# public aliases (model code reuses the version-compat mesh lookup)
+active_mesh = _active_mesh
+mesh_axis_size = _mesh_axis_size
 
 
 def dp_axes(names: Optional[Tuple[str, ...]] = None):
@@ -79,9 +108,8 @@ def constrain(x: jax.Array, logical: str) -> jax.Array:
     dp = dp_axes(names)
     tp = tp_axis(names)
     if logical == "bshd" and tp is not None:
-        mesh = jax.sharding.get_abstract_mesh()
-        tp_n = dict(zip(mesh.axis_names, mesh.shape.values())).get("model", 1) \
-            if not hasattr(mesh.shape, "get") else mesh.shape.get("model", 1)
+        mesh = _active_mesh()
+        tp_n = _mesh_axis_size(mesh, "model")
         # PREFER sequence sharding (context parallelism): projections and
         # the attention output then stay sequence-local, eliminating the
         # per-layer residual all-gather + partial-sum all-reduce entirely;

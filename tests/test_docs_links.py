@@ -1,0 +1,43 @@
+"""Every internal link in README.md / docs/*.md must resolve.
+
+This is the docs check CI runs (.github/workflows/ci.yml): file targets
+must exist, and #anchors (same-file or cross-file) must match a heading.
+"""
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = sorted([ROOT / "README.md", *(ROOT / "docs").glob("*.md")])
+LINK = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+
+
+def _slug(heading: str) -> str:
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return re.sub(r"\s+", "-", s)
+
+
+def _anchors(md: Path):
+    return {_slug(m.group(1))
+            for m in re.finditer(r"^#+\s+(.+)$", md.read_text(), re.M)}
+
+
+@pytest.mark.parametrize("md", DOCS, ids=lambda p: str(p.relative_to(ROOT)))
+def test_internal_links_resolve(md):
+    text = md.read_text()
+    for target in LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path, _, anchor = target.partition("#")
+        dest = md if not path else (md.parent / path).resolve()
+        assert dest.exists(), f"{md.name}: broken link -> {target}"
+        if anchor and dest.suffix == ".md":
+            assert _slug(anchor) in _anchors(dest), \
+                f"{md.name}: missing anchor -> {target}"
+
+
+def test_docs_tree_complete():
+    for name in ("architecture.md", "kernels.md", "serving.md"):
+        assert (ROOT / "docs" / name).exists(), f"docs/{name} missing"

@@ -33,8 +33,8 @@ x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)
                       ).astype(jnp.bfloat16)
 y_ref, aux_ref = moe_ffn(params, x, cfg)
 
-mesh = jax.make_mesh((1, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh
+mesh = make_mesh((1, 4), ("data", "model"))
 fn = make_sharded_moe(cfg, mesh)
 y_a2a, aux_a2a = jax.jit(fn)(params, x)
 err = float(jnp.abs(y_a2a.astype(jnp.float32)
