@@ -199,6 +199,17 @@ class ServeConfig:
     page_size: int = 16         # tokens per page (TPU wants >= 128 in prod)
     num_pages: int = 0          # 0 = dense-equivalent capacity (+ null page)
 
+    # --- prefix cache (serve/prefix_cache.py) -------------------------------
+    # prefix_cache=True keeps finished requests' prompt pages in a radix
+    # tree keyed by page-sized token blocks; new requests reuse the longest
+    # cached prefix (refcounted, copy-on-write) and prefill only the
+    # uncached suffix.  Paged mode only.
+    prefix_cache: bool = False
+    # keep at least this fraction of the pool free by LRU-evicting
+    # unreferenced cached pages after completions (0 = evict only when an
+    # admission would otherwise run out of pages)
+    prefix_evict_watermark: float = 0.0
+
     def pages_per_seq(self) -> int:
         return pages_for_tokens(self.max_seq, self.page_size)
 

@@ -37,21 +37,13 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _online_softmax_step(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *,
-                         k_first, valid, window: int, scale: float):
-    """One KV-block update of the running (m, l, acc) triple in VMEM.
+def _online_merge(s, mask, v, acc_ref, m_ref, l_ref):
+    """Fold one masked score block into the running (m, l, acc) triple.
 
-    Shared by the dense and the paged decode kernels - only how the KV block
-    got into VMEM differs (contiguous BlockSpec walk vs block-table gather).
-    """
-    q = q_ref[0, 0].astype(jnp.float32) * scale              # (G, D)
-    k = k_ref[0].astype(jnp.float32)[:, 0]                   # (bk, D)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)  # (G, bk)
-    pos = k_first + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    mask = pos < valid
-    if window > 0:
-        mask = mask & (pos >= valid - window)
+    THE online-softmax merge, shared by every decode/suffix-prefill kernel:
+    s: (rows, bk) f32 scores, mask: (rows, bk) bool, v: (bk, D) f32.  Only
+    how s/mask were built differs per kernel (scalar valid-length vs 2-D
+    offset-causal)."""
     s = jnp.where(mask, s, NEG_INF)
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
@@ -61,15 +53,36 @@ def _online_softmax_step(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *,
                       jnp.exp2((m_prev - m_new) * LOG2E))
     l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
     m_ref[...] = m_new
-    v = v_ref[0].astype(jnp.float32)[:, 0]                   # (bk, D)
     pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32)
     acc_ref[...] = acc_ref[...] * alpha + pv
 
 
+def _online_softmax_step(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *,
+                         k_first, valid, window: int, scale: float,
+                         softcap: float = 0.0):
+    """One KV-block update of the running (m, l, acc) triple in VMEM.
+
+    Shared by the dense and the paged decode kernels - only how the KV block
+    got into VMEM differs (contiguous BlockSpec walk vs block-table gather).
+    """
+    q = q_ref[0, 0].astype(jnp.float32) * scale              # (G, D)
+    k = k_ref[0].astype(jnp.float32)[:, 0]                   # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, bk)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = k_first + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = pos < valid
+    if window > 0:
+        mask = mask & (pos >= valid - window)
+    v = v_ref[0].astype(jnp.float32)[:, 0]                   # (bk, D)
+    _online_merge(s, mask, v, acc_ref, m_ref, l_ref)
+
+
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
-                   l_ref, *, window: int, scale: float, block_kv: int,
-                   gq: int):
+                   l_ref, *, window: int, scale: float, softcap: float,
+                   block_kv: int, gq: int):
     j = pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -89,7 +102,7 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
     def _compute():
         _online_softmax_step(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
                              k_first=k_first, valid=valid, window=window,
-                             scale=scale)
+                             scale=scale, softcap=softcap)
 
     @pl.when(j == nk - 1)
     def _finalize():
@@ -97,9 +110,11 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "scale", "block_kv"))
+@functools.partial(jax.jit, static_argnames=("window", "scale",
+                                             "logit_softcap", "block_kv"))
 def flash_decode(q, k_cache, v_cache, cache_len, *, window: int = 0,
                  scale: Optional[float] = None,
+                 logit_softcap: float = 0.0,
                  block_kv: int = 512) -> jax.Array:
     """q: (B,1,Hq,D); caches: (B,S,Hkv,D); cache_len: (B,) or scalar."""
     B, _, Hq, D = q.shape
@@ -119,7 +134,8 @@ def flash_decode(q, k_cache, v_cache, cache_len, *, window: int = 0,
     qg = q.reshape(B, Hkv, G, D)
 
     kernel = functools.partial(_decode_kernel, window=window, scale=scale,
-                               block_kv=block_kv, gq=G)
+                               softcap=logit_softcap, block_kv=block_kv,
+                               gq=G)
     grid = (B, Hkv, nk)
     o = pl.pallas_call(
         kernel,
@@ -150,7 +166,7 @@ def flash_decode(q, k_cache, v_cache, cache_len, *, window: int = 0,
 
 def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                          acc_ref, m_ref, l_ref, *, window: int, scale: float,
-                         page_size: int):
+                         softcap: float, page_size: int):
     """bt_ref: (B, n_max) block table, len_ref: (B,) valid lengths - both
     scalar-prefetched into SMEM; the k/v BlockSpec index maps already walked
     the table, so k_ref/v_ref hold page j of THIS sequence."""
@@ -174,7 +190,7 @@ def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     def _compute():
         _online_softmax_step(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
                              k_first=k_first, valid=valid, window=window,
-                             scale=scale)
+                             scale=scale, softcap=softcap)
 
     @pl.when(j == nk - 1)
     def _finalize():
@@ -182,10 +198,12 @@ def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "scale"))
+@functools.partial(jax.jit, static_argnames=("window", "scale",
+                                             "logit_softcap"))
 def paged_flash_decode(q, k_pages, v_pages, block_table, cache_len, *,
                        window: int = 0,
-                       scale: Optional[float] = None) -> jax.Array:
+                       scale: Optional[float] = None,
+                       logit_softcap: float = 0.0) -> jax.Array:
     """Decode against a paged KV cache.
 
     q:           (B, 1, Hq, D)
@@ -208,7 +226,8 @@ def paged_flash_decode(q, k_pages, v_pages, block_table, cache_len, *,
 
     qg = q.reshape(B, Hkv, G, D)
     kernel = functools.partial(_paged_decode_kernel, window=window,
-                               scale=scale, page_size=ps)
+                               scale=scale, softcap=logit_softcap,
+                               page_size=ps)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,       # block table + lengths land in SMEM
         grid=(B, Hkv, n_max),

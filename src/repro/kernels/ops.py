@@ -176,19 +176,21 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 # ===========================================================================
 
 def flash_decode(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                 logit_softcap: float = 0.0,
                  scale: Optional[float] = None,
                  impl: Optional[str] = None) -> jax.Array:
     impl = impl or default_impl()
     if impl == "pallas":
         from . import flash_decode as fd
         return fd.flash_decode(q, k_cache, v_cache, cache_len, window=window,
-                               scale=scale)
+                               logit_softcap=logit_softcap, scale=scale)
     return ref.flash_decode(q, k_cache, v_cache, cache_len, window=window,
-                            scale=scale)
+                            logit_softcap=logit_softcap, scale=scale)
 
 
 def paged_flash_decode(q, k_pages, v_pages, block_table, cache_len, *,
-                       window: int = 0, scale: Optional[float] = None,
+                       window: int = 0, logit_softcap: float = 0.0,
+                       scale: Optional[float] = None,
                        impl: Optional[str] = None) -> jax.Array:
     """Decode against a paged KV cache (vLLM-style block table).
 
@@ -201,12 +203,41 @@ def paged_flash_decode(q, k_pages, v_pages, block_table, cache_len, *,
     if impl == "pallas":
         from . import flash_decode as fd
         return fd.paged_flash_decode(q, k_pages, v_pages, block_table,
-                                     cache_len, window=window, scale=scale)
+                                     cache_len, window=window,
+                                     logit_softcap=logit_softcap,
+                                     scale=scale)
     return ref.paged_flash_decode(q, k_pages, v_pages, block_table,
-                                  cache_len, window=window, scale=scale)
+                                  cache_len, window=window,
+                                  logit_softcap=logit_softcap, scale=scale)
+
+
+def paged_prefill_attention(q, k_pages, v_pages, page_row, q_offset, *,
+                            window: int = 0, logit_softcap: float = 0.0,
+                            scale: Optional[float] = None,
+                            impl: Optional[str] = None) -> jax.Array:
+    """Suffix-prefill attention over a partially cached block table.
+
+    q: (1,S,Hq,D) suffix queries at absolute positions q_offset + arange(S)
+    (suffix K/V already written into its pages); page_row: (n_max,) the
+    sequence's block-table row.  Each row attends causally over the cached
+    prefix pages and the suffix itself.  The Pallas path walks the row from
+    SMEM with the (m, l, acc) merge VMEM-resident (kernels/paged_prefill.py);
+    the ref path gathers pages and applies the offset causal mask."""
+    impl = impl or default_impl()
+    if impl == "pallas":
+        from . import paged_prefill as pp
+        return pp.paged_prefill_attention(q, k_pages, v_pages, page_row,
+                                          q_offset, window=window,
+                                          logit_softcap=logit_softcap,
+                                          scale=scale)
+    return ref.paged_prefill_attention(q, k_pages, v_pages, page_row,
+                                       q_offset, window=window,
+                                       logit_softcap=logit_softcap,
+                                       scale=scale)
 
 
 def decode_attention_naive(q, k_cache, v_cache, cache_len, *,
+                           logit_softcap: float = 0.0,
                            scale: Optional[float] = None) -> jax.Array:
     """Unchunked decode attention for SPMD sequence-parallel KV caches.
 
@@ -225,6 +256,8 @@ def decode_attention_naive(q, k_cache, v_cache, cache_len, *,
         cache_len = jnp.full((B,), cache_len)
     qf = (q.astype(jnp.float32) * sc).reshape(B, Hkv, G, D)
     s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32))
+    if logit_softcap > 0.0:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
     mask = jnp.arange(S)[None, :] < cache_len[:, None]
     s = jnp.where(mask[:, None, None, :], s, NEG_INF)
     m = jnp.max(s, -1, keepdims=True)

@@ -1,0 +1,149 @@
+"""Pallas TPU paged suffix prefill: new prompt tokens vs a partially
+cached paged KV pool.
+
+Prefix caching (serve/prefix_cache.py) admits a request whose leading
+prompt pages are already resident in the page pool; only the uncached
+suffix is prefilled.  The suffix queries sit at absolute positions
+``q_offset + i`` and must attend causally over EVERYTHING before them -
+the cached prefix pages AND the suffix's own K/V, both reached through
+the sequence's block-table row.
+
+Same construction as paged_flash_decode (kernels/flash_decode.py): the
+block-table row is scalar-prefetched into SMEM, the BlockSpec index map
+IS the page-table walk, and the running (m, l, acc) online-softmax state
+stays in VMEM scratch across KV pages.  The only new ingredient is a 2-D
+causal mask - each suffix row r masks columns > q_offset + r - computed
+branch-free from the prefetched offset.
+
+The grid walks the FULL block-table row (n_max pages, a static shape);
+pages beyond the causal frontier are skipped with pl.when, so the cost
+scales with the attended prefix, not with max_seq.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .flash_decode import _online_merge
+from .pallas_compat import CompilerParams
+
+NEG_INF = -1e30
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _suffix_kernel(pr_ref, off_ref, q_ref, k_ref, v_ref, o_ref, acc_ref,
+                   m_ref, l_ref, *, page_size: int, window: int,
+                   scale: float, softcap: float, gq: int, s_suf: int):
+    """pr_ref: (n_max,) block-table row, off_ref: (1,) suffix start - both
+    scalar-prefetched; k_ref/v_ref hold page j of this sequence (the index
+    map already walked the table)."""
+    j = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    off = off_ref[0]
+    k_first = j * page_size
+    # last suffix row attends through position off + s_suf - 1; pages fully
+    # past that frontier contribute nothing (and may be the null page)
+    run = k_first < off + s_suf
+    if window > 0:
+        run = run & (k_first + page_size > off - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32).reshape(s_suf * gq, -1) * scale
+        k = k_ref[0].astype(jnp.float32)[:, 0]               # (ps, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        # row r of the flattened (s_suf * G) block is query s_suf-index
+        # r // gq at absolute position off + r // gq
+        row = off + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // gq
+        col = k_first + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = col <= row
+        if window > 0:
+            mask = mask & (col > row - window)
+        v = v_ref[0].astype(jnp.float32)[:, 0]               # (ps, D)
+        _online_merge(s, mask, v, acc_ref, m_ref, l_ref)
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o = (acc_ref[...] / l).reshape(s_suf, gq, -1)
+        o_ref[0] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale",
+                                             "logit_softcap"))
+def paged_prefill_attention(q, k_pages, v_pages, page_row, q_offset, *,
+                            window: int = 0,
+                            scale: Optional[float] = None,
+                            logit_softcap: float = 0.0) -> jax.Array:
+    """Suffix-prefill attention through the block table.
+
+    q:           (1, S, Hq, D) suffix queries at absolute positions
+                 q_offset + arange(S); suffix K/V must already be written
+                 into their pages (attn_prefill_suffix_paged does both)
+    k/v_pages:   (P, page_size, Hkv, D) global page pool
+    page_row:    (n_max,) int32 - this sequence's block-table row,
+                 position-major; entries past the reservation point at the
+                 null page 0 and are never touched by the causal mask
+    q_offset:    scalar int32, absolute position of the first suffix token
+    Returns (1, S, Hq, D).
+    """
+    _, S, Hq, D = q.shape
+    ps, Hkv = k_pages.shape[1], k_pages.shape[2]
+    G = Hq // Hkv
+    n_max = page_row.shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    page_row = jnp.asarray(page_row, jnp.int32)
+    off = jnp.reshape(jnp.asarray(q_offset, jnp.int32), (1,))
+
+    # head-major GQA grouping, one grid row per KV head
+    qg = q[0].reshape(S, Hkv, G, D).transpose(1, 0, 2, 3)    # (Hkv,S,G,D)
+    kernel = functools.partial(_suffix_kernel, page_size=ps, window=window,
+                               scale=scale, softcap=logit_softcap, gq=G,
+                               s_suf=S)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,           # block-table row + offset in SMEM
+        grid=(Hkv, n_max),
+        in_specs=[
+            pl.BlockSpec((1, S, G, D), lambda h, j, pr, off: (h, 0, 0, 0)),
+            # the index map IS the page-table walk: page j of the sequence
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda h, j, pr, off: (pr[j], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda h, j, pr, off: (pr[j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, S, G, D),
+                               lambda h, j, pr, off: (h, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((S * G, D), jnp.float32),
+            pltpu.VMEM((S * G, 1), jnp.float32),
+            pltpu.VMEM((S * G, 1), jnp.float32),
+        ],
+    )
+    o = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Hkv, S, G, D), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=_interpret(),
+    )(page_row, off, qg, k_pages, v_pages)
+    return o.transpose(1, 0, 2, 3).reshape(1, S, Hq, D)

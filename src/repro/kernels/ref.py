@@ -141,6 +141,7 @@ def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                  cache_len, *,
                  scale: Optional[float] = None,
                  window: int = 0,
+                 logit_softcap: float = 0.0,
                  block_kv: int = 1024) -> jax.Array:
     """q: (B, 1, Hq, D); k_cache/v_cache: (B, S_max, Hkv, D); cache_len: (B,)
     valid prefix length per sequence.  Returns (B, 1, Hq, D)."""
@@ -168,6 +169,8 @@ def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         kblk, vblk, j = blk
         pos = j * block_kv + jnp.arange(block_kv)          # (bk,)
         s = jnp.einsum("bhgd,bkhd->bhgk", qf, kblk.astype(jnp.float32))
+        if logit_softcap > 0.0:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
         mask = pos[None, :] < cache_len[:, None]           # (B, bk)
         if window > 0:
             mask = mask & (pos[None, :] >= cache_len[:, None] - window)
@@ -195,7 +198,8 @@ def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
 def paged_flash_decode(q, k_pages, v_pages, block_table, cache_len, *,
                        scale: Optional[float] = None,
-                       window: int = 0) -> jax.Array:
+                       window: int = 0,
+                       logit_softcap: float = 0.0) -> jax.Array:
     """Decode against a paged KV cache (reference oracle).
 
     q: (B, 1, Hq, D); k_pages/v_pages: (P, page_size, Hkv, D) global page
@@ -211,7 +215,53 @@ def paged_flash_decode(q, k_pages, v_pages, block_table, cache_len, *,
     block_table = jnp.asarray(block_table, jnp.int32)
     k = k_pages[block_table].reshape(B, -1, Hkv, D)
     v = v_pages[block_table].reshape(B, -1, Hkv, D)
-    return flash_decode(q, k, v, cache_len, scale=scale, window=window)
+    return flash_decode(q, k, v, cache_len, scale=scale, window=window,
+                        logit_softcap=logit_softcap)
+
+
+def paged_prefill_attention(q, k_pages, v_pages, page_row, q_offset, *,
+                            scale: Optional[float] = None,
+                            window: int = 0,
+                            logit_softcap: float = 0.0) -> jax.Array:
+    """Suffix-prefill attention through a block table (reference oracle).
+
+    q: (1, S, Hq, D) suffix queries at absolute positions q_offset +
+    arange(S); k/v_pages: (P, page_size, Hkv, D) global pool; page_row:
+    (n_max,) this sequence's block-table row (suffix K/V already written
+    into its pages).  Each query row attends causally over positions
+    0..q_offset+row - cached prefix pages and the suffix itself.
+
+    Gathers the row's pages into a contiguous strip and applies the offset
+    causal mask - the ground truth the Pallas suffix kernel
+    (kernels/paged_prefill.py) is validated against, and the portable
+    prefix-cached serving path off-TPU.
+    """
+    _, S, Hq, D = q.shape
+    _, ps, Hkv, _ = k_pages.shape
+    G = _gqa_expand(Hq, Hkv)
+    sc = scale if scale is not None else 1.0 / math.sqrt(D)
+    LOG2E = 1.4426950408889634
+    page_row = jnp.asarray(page_row, jnp.int32)
+    k = k_pages[page_row].reshape(-1, Hkv, D)            # (n_max*ps, Hkv, D)
+    v = v_pages[page_row].reshape(-1, Hkv, D)
+    Skv = k.shape[0]
+    qf = (q[0].astype(jnp.float32) * sc).reshape(S, Hkv, G, D)
+    s = jnp.einsum("shgd,khd->shgk", qf, k.astype(jnp.float32))
+    if logit_softcap > 0.0:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    row = jnp.asarray(q_offset, jnp.int32) + jnp.arange(S)
+    col = jnp.arange(Skv)
+    mask = col[None, :] <= row[:, None]
+    if window > 0:
+        mask = mask & (col[None, :] > row[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, -1, keepdims=True)
+    m_safe = jnp.where(m <= NEG_INF / 2, 0.0, m)
+    p = jnp.where(mask[:, None, None, :],
+                  jnp.exp2((s - m_safe) * LOG2E), 0.0)
+    l = jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-20)
+    o = jnp.einsum("shgk,khd->shgd", p / l, v.astype(jnp.float32))
+    return o.reshape(1, S, Hq, D).astype(q.dtype)
 
 
 def combine_partial_softmax(m_parts, l_parts, o_parts):

@@ -139,8 +139,43 @@ def attn_decode_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
     k_pages = k_pages.at[page, off].set(k[:, 0].astype(k_pages.dtype))
     v_pages = v_pages.at[page, off].set(v[:, 0].astype(v_pages.dtype))
     o = ops.paged_flash_decode(q, k_pages, v_pages, block_table, lens + 1,
-                               window=window, impl=impl)
+                               window=window,
+                               logit_softcap=cfg.attn_logit_softcap,
+                               impl=impl)
     y = dense(params["wo"], o.reshape(B, 1, cfg.n_heads * cfg.head_dim))
+    return y, k_pages, v_pages
+
+
+def attn_prefill_suffix_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
+                              page_row, offset, *, window: int = 0,
+                              impl: Optional[str] = None):
+    """Prefill the UNCACHED suffix of one sequence's prompt into its pages.
+
+    Prefix caching (serve/prefix_cache.py) placed the cached prompt pages
+    at the front of the sequence's block-table row; x: (1, S, D) holds the
+    remaining suffix tokens at absolute positions offset + arange(S) (S a
+    multiple of the page size unless the whole prompt was cached; trailing
+    pad K/V is masked by `lens` at decode time).  Suffix K/V is scattered
+    token-by-token through the block-table row - the suffix need not start
+    on a page boundary - then the suffix queries attend over cached pages
+    AND the fresh suffix via the paged suffix-attention kernel.
+    Returns (y, k_pages, v_pages)."""
+    q, k, v = _qkv(params, x, cfg)
+    S = x.shape[1]
+    page_size = k_pages.shape[1]
+    pos = jnp.asarray(offset, jnp.int32) + jnp.arange(S)
+    if cfg.use_rope:
+        q = rope(q, pos, cfg.rope_theta, cfg.rope_scaling)
+        k = rope(k, pos, cfg.rope_theta, cfg.rope_scaling)
+    pages = page_row[pos // page_size]
+    offs = pos % page_size
+    k_pages = k_pages.at[pages, offs].set(k[0].astype(k_pages.dtype))
+    v_pages = v_pages.at[pages, offs].set(v[0].astype(v_pages.dtype))
+    o = ops.paged_prefill_attention(q, k_pages, v_pages, page_row, offset,
+                                    window=window,
+                                    logit_softcap=cfg.attn_logit_softcap,
+                                    impl=impl)
+    y = dense(params["wo"], o.reshape(1, S, cfg.n_heads * cfg.head_dim))
     return y, k_pages, v_pages
 
 
@@ -170,9 +205,11 @@ def attn_decode(params, x, cfg: ModelConfig, cache_k, cache_v, lens, *,
     if seq_parallel:
         # naive form: XLA SPMD partitions the softmax reductions over the
         # seq-sharded cache (partial-softmax merge across chips)
-        o = ops.decode_attention_naive(q, cache_k, cache_v, attend_len)
+        o = ops.decode_attention_naive(q, cache_k, cache_v, attend_len,
+                                       logit_softcap=cfg.attn_logit_softcap)
     else:
         o = ops.flash_decode(q, cache_k, cache_v, attend_len, window=window,
+                             logit_softcap=cfg.attn_logit_softcap,
                              impl=impl)
     y = dense(params["wo"], o.reshape(B, 1, cfg.n_heads * cfg.head_dim))
     return y, cache_k, cache_v

@@ -33,6 +33,10 @@ class Model:
     # paged KV-cache prompt prefill (attention families only; see
     # serve/paged_cache.py for the host-side allocator)
     prefill_paged: Optional[Callable] = None
+    # prefix-cached suffix prefill: only the uncached tail of the prompt is
+    # computed, attending over cached pages via the block table
+    # (serve/prefix_cache.py owns the host-side radix tree)
+    prefill_suffix: Optional[Callable] = None
 
 
 def build_model(cfg: ModelConfig) -> Model:
@@ -224,6 +228,40 @@ def build_model(cfg: ModelConfig) -> Model:
         logits = unembed(params["tok"], x_last, cfg)
         return logits.astype(jnp.float32), cache, lens
 
+    def prefill_suffix(params, batch, cache, page_row, *, impl=None):
+        """Prefill the UNCACHED suffix of one sequence's prompt (B=1).
+
+        batch: {"tokens": (1, S_pad) suffix tokens (zero-padded),
+                "offset": (1,) absolute position of the first suffix token,
+                "true_lens": (1,) FULL prompt length}; page_row: (n_max,)
+        the sequence's block-table row (cached prefix pages first).
+        Suffix queries attend over cached pages and the suffix itself.
+        Returns (last_logits, cache, lens) with lens = the full prompt
+        length."""
+        if fam not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                f"suffix prefill needs an attention family, got {fam}")
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        off = jnp.asarray(batch["offset"], jnp.int32)[0]
+        x = embed(params["tok"], tokens, cfg)
+        if not cfg.use_rope and not cfg.rwkv:
+            # absolute sinusoidal positions start at the suffix offset
+            tbl = sinusoidal_positions(65536, cfg.d_model)
+            x = x + jnp.take(tbl, jnp.minimum(off + jnp.arange(S), 65535),
+                             axis=0)[None].astype(x.dtype)
+        x = constrain(x, "btd")
+        x, cache = T.stack_prefill_suffix_paged(params["blocks"], x, cfg,
+                                                cache, page_row, off,
+                                                impl=impl)
+        lens = jnp.asarray(batch["true_lens"], jnp.int32)
+        x = apply_norm(params["final_norm"], x, cfg)
+        # the last REAL prompt token sits at suffix index lens - offset - 1
+        x_last = jnp.take_along_axis(x, (lens - off - 1)[:, None, None],
+                                     axis=1)
+        logits = unembed(params["tok"], x_last, cfg)
+        return logits.astype(jnp.float32), cache, lens
+
     def _fill_cross_cache(params, cache, enc_out):
         from .layers import dense
         dec = params["blocks"]["decoder"]
@@ -310,8 +348,9 @@ def build_model(cfg: ModelConfig) -> Model:
         logits = unembed(params["tok"], x, cfg)
         return logits.astype(jnp.float32), cache
 
+    is_attn = fam in ("dense", "moe", "vlm")
     return Model(cfg=cfg, init=init, forward=forward, loss=loss,
                  init_cache=init_cache, prefill=prefill,
                  decode_step=decode_step,
-                 prefill_paged=prefill_paged
-                 if fam in ("dense", "moe", "vlm") else None)
+                 prefill_paged=prefill_paged if is_attn else None,
+                 prefill_suffix=prefill_suffix if is_attn else None)

@@ -25,7 +25,8 @@ from ..compat import optimization_barrier
 from ..configs.base import ModelConfig
 from ..sharding import constrain
 from .attention import (attn_decode, attn_decode_paged, attn_forward,
-                        attn_init, attn_prefill, attn_prefill_paged)
+                        attn_init, attn_prefill, attn_prefill_paged,
+                        attn_prefill_suffix_paged)
 from .layers import apply_norm, grad_cast, mlp, mlp_init, norm_init, pdtype
 from .mamba2 import (mamba2_decode, mamba2_forward, mamba2_init,
                      mamba2_init_state, mamba2_prefill)
@@ -205,6 +206,33 @@ def stack_prefill_paged(params, x, cfg: ModelConfig, cache, page_ids, *,
             cfg, flag,
             lambda w: attn_prefill_paged(p["attn"], h_in, cfg, kp, vp,
                                          page_ids, window=w, impl=impl))
+        return _ffn_tail(p, x + h, cfg), (kp, vp)
+
+    x, (kp, vp) = jax.lax.scan(
+        body, x, (params, cache["k_pages"], cache["v_pages"], flags))
+    return x, {"k_pages": kp, "v_pages": vp,
+               "block_table": cache["block_table"]}
+
+
+def stack_prefill_suffix_paged(params, x, cfg: ModelConfig, cache, page_row,
+                               offset, *, impl=None):
+    """Prefix-cached paged prefill of ONE sequence (B=1): x holds only the
+    UNCACHED prompt suffix, at absolute positions offset + arange(S).
+    page_row: (n_max,) the sequence's block-table row - cached prefix pages
+    first, then the freshly allocated suffix/generation pages.  The block
+    table itself is host-managed (serve/prefix_cache.py) and passes through
+    untouched."""
+    flags = _layer_windows(cfg)
+
+    def body(x, xs):
+        p, kp, vp, flag = xs
+        x = constrain(x, "btd")
+        h_in = apply_norm(p["n1"], x, cfg)
+        h, kp, vp = _windowed(
+            cfg, flag,
+            lambda w: attn_prefill_suffix_paged(p["attn"], h_in, cfg, kp, vp,
+                                                page_row, offset, window=w,
+                                                impl=impl))
         return _ffn_tail(p, x + h, cfg), (kp, vp)
 
     x, (kp, vp) = jax.lax.scan(

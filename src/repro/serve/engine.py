@@ -21,9 +21,21 @@ Prefill: attention families run one batched prefill over the (padded)
 prompt - real length travels in batch["true_lens"] so logits come from the
 last REAL token; recurrent families (ssm / hybrid / audio) keep the exact
 token-by-token path.
+
+Prefix caching (ServeConfig.prefix_cache, paged mode only): finished
+requests publish their prompt pages into a radix tree
+(serve/prefix_cache.py) instead of freeing them; admission matches the
+longest cached prefix, attaches those pages to the slot (refcounted), and
+prefills ONLY the uncached suffix - suffix queries attend over the cached
+pages through the block table.  A fully cached prompt recomputes just its
+last token for logits, copy-on-writing the final shared page first.  When
+the free list runs low, unreferenced cached pages are LRU-evicted back to
+the pool, so caching never blocks an admission plain paged serving could
+have made.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -35,8 +47,10 @@ import numpy as np
 from ..configs.base import ModelConfig, ServeConfig
 from ..models import Model, build_model
 from .paged_cache import PageAllocator, pages_needed
+from .prefix_cache import RadixPrefixCache
 from .serve_step import (make_paged_prefill_step, make_prefill_step,
-                         make_serve_step, sample_token)
+                         make_serve_step, make_suffix_prefill_step,
+                         sample_token)
 
 # attention-family prompts are padded to a multiple of this before the
 # batched prefill, bounding jit recompiles to one per bucket
@@ -61,6 +75,9 @@ class ServeEngine:
         B = scfg.max_batch
         self.paged = scfg.paged
         self._attention_family = cfg.family in ("dense", "moe", "vlm")
+        self.prefix: Optional[RadixPrefixCache] = None
+        if scfg.prefix_cache and not scfg.paged:
+            raise ValueError("prefix_cache requires paged=True")
         if self.paged:
             if model.prefill_paged is None:
                 raise ValueError(f"paged serving needs an attention family, "
@@ -77,11 +94,19 @@ class ServeEngine:
             self.cache = model.init_cache(B, scfg.max_seq,
                                           page_size=scfg.page_size,
                                           num_pages=num_pages)
-            self.peak_pages = 0
+            if scfg.prefix_cache:
+                self.prefix = RadixPrefixCache(self.allocator,
+                                               scfg.page_size)
         else:
             self.allocator = None
             self.cache = model.init_cache(B, scfg.max_seq,
                                           enc_len=scfg.max_seq)
+        # metrics (all modes; prefix_* stay 0 without the prefix cache)
+        self.peak_pages = 0          # pool pages in use, incl. cached
+        self.peak_live_pages = 0     # distinct pages referenced by slots
+        self.prefill_tokens = 0      # prompt tokens actually computed
+        self.prefix_hit_tokens = 0   # prompt tokens served from the cache
+        self.cow_copies = 0          # copy-on-write page copies
         self.lens = jnp.zeros((B,), jnp.int32)
         self.slots: List[Optional[Request]] = [None] * B
         self.tokens = jnp.zeros((B, 1), jnp.int32)
@@ -101,15 +126,39 @@ class ServeEngine:
         if self.paged:
             self._prefill_paged = _jit_donating_cache(
                 make_paged_prefill_step(model), 2)
+            self._prefill_suffix = _jit_donating_cache(
+                make_suffix_prefill_step(model), 2)
 
     # ------------------------------------------------------------------
     def submit(self, prompt: List[int],
                max_new_tokens: Optional[int] = None) -> int:
-        n_new = max_new_tokens or self.scfg.max_new_tokens
+        """Enqueue a request.  Everything that can never be served -
+        empty prompt, zero generation budget, overflowing max_seq, a page
+        reservation larger than the engine can ever grant - fails HERE
+        with a clear error instead of deep inside prefill or the
+        allocator."""
+        n_new = self.scfg.max_new_tokens if max_new_tokens is None \
+            else max_new_tokens
+        if not prompt:
+            raise ValueError("empty prompt")
+        if n_new < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {n_new}")
         if len(prompt) + n_new > self.scfg.max_seq:
             raise ValueError(
                 f"request does not fit: {len(prompt)} prompt + {n_new} new "
                 f"tokens > max_seq {self.scfg.max_seq}")
+        if self.paged:
+            need = pages_needed(len(prompt) + n_new, self.scfg.page_size)
+            usable = min(self.allocator.max_pages_per_seq,
+                         self.allocator.num_pages - 1)
+            if need > usable:
+                # backpressure cannot help a reservation larger than the
+                # whole pool - fail fast instead of queueing forever
+                raise ValueError(
+                    f"request needs {need} pages; the engine can grant at "
+                    f"most {usable} (pool {self.allocator.num_pages}, "
+                    f"max_seq {self.scfg.max_seq}, page "
+                    f"{self.scfg.page_size})")
         self._uid += 1
         self.queue.append(Request(self._uid, list(prompt), n_new))
         return self._uid
@@ -119,6 +168,18 @@ class ServeEngine:
             if s is None:
                 return i
         return None
+
+    def prefix_stats(self) -> Dict[str, int]:
+        """Prefill / prefix-cache counters (zeros when caching is off)."""
+        total = self.prefill_tokens + self.prefix_hit_tokens
+        return {"prefill_tokens": self.prefill_tokens,
+                "prefix_hit_tokens": self.prefix_hit_tokens,
+                "prompt_tokens": total,
+                "cow_copies": self.cow_copies,
+                "cached_pages": self.prefix.cached_pages
+                if self.prefix is not None else 0,
+                "peak_pages": self.peak_pages,
+                "peak_live_pages": self.peak_live_pages}
 
     def kv_cache_bytes(self) -> int:
         """Allocated cache bytes, every leaf: KV strips or pages, block
@@ -176,29 +237,48 @@ class ServeEngine:
             sub["k"][:, 0])
         self.cache["v"] = self.cache["v"].at[:, slot, :s_pad].set(
             sub["v"][:, 0])
+        self.prefill_tokens += s_real
         self._place(slot, req, logits, s_real)
+
+    def _note_alloc(self):
+        self.peak_pages = max(self.peak_pages, self.allocator.used_pages)
+        self.peak_live_pages = max(self.peak_live_pages,
+                                   self.allocator.live_pages())
+
+    def _ensure_free(self, n: int, protect=frozenset()) -> bool:
+        """True if n pages are (or can be made) free.  With the prefix
+        cache, LRU-evicts unreferenced cached pages - never `protect`
+        (pages about to be attached) or anything a slot references."""
+        if self.allocator.can_alloc(n):
+            return True
+        if self.prefix is not None:
+            self.prefix.evict(n - self.allocator.free_pages,
+                              protect=frozenset(protect))
+        return self.allocator.can_alloc(n)
+
+    def _copy_page(self, src: int, dst: int):
+        """Device-side copy of one page across every layer's K and V slab
+        (the data half of copy-on-write; the allocator did the
+        bookkeeping)."""
+        for key in ("k_pages", "v_pages"):
+            slab = self.cache[key]
+            self.cache[key] = slab.at[:, dst].set(slab[:, src])
 
     def _admit_paged(self, slot: int) -> bool:
         """Paged cache: reserve the request's worst case up front; prefill
-        the prompt straight into its pages.  False = out of pages."""
+        the prompt straight into its pages.  False = out of pages.
+        (Reservations that can never fit were rejected at submit time.)"""
+        if self.prefix is not None:
+            return self._admit_prefix(slot)
         req = self.queue[0]
         scfg = self.scfg
         need = pages_needed(len(req.prompt) + req.max_new_tokens,
                             scfg.page_size)
-        usable = min(self.allocator.max_pages_per_seq,
-                     self.allocator.num_pages - 1)
-        if need > usable:
-            # backpressure cannot help a reservation larger than the whole
-            # pool (or than max_seq) - fail fast instead of queueing forever
-            raise ValueError(
-                f"request {req.uid} needs {need} pages; the engine can "
-                f"grant at most {usable} (pool {self.allocator.num_pages}, "
-                f"max_seq {self.scfg.max_seq}, page {self.scfg.page_size})")
         if not self.allocator.can_alloc(need):
             return False
         self.queue.pop(0)
         pages = self.allocator.alloc(slot, need)
-        self.peak_pages = max(self.peak_pages, self.allocator.used_pages)
+        self._note_alloc()
         toks, s_real = self._padded_prompt(req.prompt, scfg.page_size)
         page_ids = jnp.asarray(pages[:toks.shape[1] // scfg.page_size],
                                jnp.int32)
@@ -206,7 +286,52 @@ class ServeEngine:
         batch = {"tokens": toks, "true_lens": jnp.asarray([s_real])}
         logits, self.cache, _ = self._prefill_paged(
             self.params, batch, self.cache, page_ids)
+        self.prefill_tokens += s_real
         self._place(slot, req, logits, s_real)
+        return True
+
+    def _admit_prefix(self, slot: int) -> bool:
+        """Prefix-cached admission: attach the longest cached prefix,
+        allocate pages for the rest of the reservation, prefill only the
+        uncached suffix.  False = out of pages even after eviction."""
+        req = self.queue[0]
+        scfg = self.scfg
+        ps = scfg.page_size
+        P = len(req.prompt)
+        matched = self.prefix.match(req.prompt)
+        # a fully cached prompt still recomputes its LAST token (we need
+        # its logits to start decoding); that token's K/V write lands in
+        # the final cached page, which therefore gets a private
+        # copy-on-write copy instead of being attached
+        full_cover = bool(matched) and len(matched) * ps >= P
+        shared = matched[:-1] if full_cover else matched
+        need_total = pages_needed(P + req.max_new_tokens, ps)
+        n_fresh = need_total - len(shared)
+        if not self._ensure_free(n_fresh, protect=matched):
+            return False
+        self.queue.pop(0)
+        if shared:
+            self.allocator.attach(slot, shared)
+        owned = self.allocator.alloc(slot, n_fresh)
+        if full_cover:
+            self._copy_page(matched[-1], owned[len(shared)])
+            self.cow_copies += 1
+        self._note_alloc()
+        suffix_start = P - 1 if full_cover else len(shared) * ps
+        suffix = req.prompt[suffix_start:]
+        s_pad = -(-len(suffix) // ps) * ps
+        toks = np.zeros((1, s_pad), np.int32)
+        toks[0, :len(suffix)] = suffix
+        self.cache["block_table"] = self.allocator.table_device()
+        page_row = jnp.asarray(self.allocator.table[slot], jnp.int32)
+        batch = {"tokens": jnp.asarray(toks),
+                 "offset": jnp.asarray([suffix_start], jnp.int32),
+                 "true_lens": jnp.asarray([P], jnp.int32)}
+        logits, self.cache, _ = self._prefill_suffix(
+            self.params, batch, self.cache, page_row)
+        self.prefill_tokens += len(suffix)
+        self.prefix_hit_tokens += P - len(suffix)
+        self._place(slot, req, logits, P)
         return True
 
     def _admit_stepwise(self, slot: int):
@@ -223,6 +348,7 @@ class ServeEngine:
             lens = lens.at[slot].add(1)
             last_logits = logits
         self.cache, self.lens = cache, lens
+        self.prefill_tokens += len(req.prompt)
         nxt = int(sample_token(last_logits)[slot, 0]) \
             if last_logits is not None else 0
         req.out_tokens.append(nxt)
@@ -230,12 +356,36 @@ class ServeEngine:
         self.slots[slot] = req
 
     # ------------------------------------------------------------------
+    def _cow_guard(self):
+        """Give any slot about to WRITE into a shared page a private copy
+        first.  By construction generation pages are private (the one
+        structural COW happens at admission), so this is a cheap defensive
+        sweep - but it makes 'decode never corrupts a cached page' an
+        invariant of the tick loop rather than of the admission math."""
+        ps = self.scfg.page_size
+        lens = np.asarray(self.lens)
+        dirty = False
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            idx = int(lens[i]) // ps
+            page = int(self.allocator.table[i, idx])
+            if self.allocator.refcount(page) > 1:
+                src, dst = self.allocator.cow(i, idx)
+                self._copy_page(src, dst)
+                self.cow_copies += 1
+                dirty = True
+        if dirty:
+            self.cache["block_table"] = self.allocator.table_device()
+
     def tick(self) -> List[Request]:
         """One engine iteration: admit + one batched decode step.
         Returns requests that finished this tick."""
         self._admit()
         if not any(s is not None for s in self.slots):
             return []
+        if self.prefix is not None:
+            self._cow_guard()
         logits, self.cache = self._decode(self.params, self.cache,
                                           self.tokens, self.lens)
         next_tokens = sample_token(logits)
@@ -253,10 +403,21 @@ class ServeEngine:
                 finished.append(req)
                 self.slots[i] = None
                 self.lens = self.lens.at[i].set(0)
-                if self.paged:
+                if self.prefix is not None:
+                    # prompt pages go into the radix tree; the partial
+                    # tail page and generation pages return to the pool
+                    self.prefix.release(i, req.prompt)
+                elif self.paged:
                     # pages go back to the pool the tick the request ends
                     self.allocator.free_slot(i)
         if finished and self.paged:
+            if self.prefix is not None \
+                    and self.scfg.prefix_evict_watermark > 0:
+                usable = self.allocator.num_pages - 1
+                target = math.ceil(self.scfg.prefix_evict_watermark * usable)
+                short = target - self.allocator.free_pages
+                if short > 0:
+                    self.prefix.evict(short)
             self.cache["block_table"] = self.allocator.table_device()
         self.tokens = new_tokens
         return finished

@@ -58,7 +58,17 @@ class OutOfPages(RuntimeError):
 
 
 class PageAllocator:
-    """Free-list page allocator + per-slot page lists + block-table mirror."""
+    """Free-list page allocator + per-slot page lists + block-table mirror.
+
+    Pages are REFERENCE COUNTED: `alloc` hands out private pages (refcount
+    1), `attach` lets a slot share pages another holder already references
+    (refcount + 1 each - prefix caching shares cached prompt pages this
+    way), and `unref` returns a page to the free list only when its last
+    reference drops.  `cow` gives a slot a private replacement for a shared
+    page before a write would touch it (copy-on-write bookkeeping; the
+    engine copies the device-side page contents).  Exclusive use - alloc /
+    free_slot only - behaves exactly like the pre-refcount allocator.
+    """
 
     def __init__(self, num_pages: int, page_size: int, max_batch: int,
                  max_seq: int):
@@ -71,6 +81,7 @@ class PageAllocator:
         self.max_pages_per_seq = pages_needed(max_seq, page_size)
         # LIFO free list; page 0 stays reserved forever
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._refs = np.zeros(num_pages, np.int32)
         self._slot_pages: List[List[int]] = [[] for _ in range(max_batch)]
         self.table = np.zeros((max_batch, self.max_pages_per_seq), np.int32)
 
@@ -89,9 +100,18 @@ class PageAllocator:
     def slot_pages(self, slot: int) -> List[int]:
         return list(self._slot_pages[slot])
 
+    def refcount(self, page: int) -> int:
+        return int(self._refs[page])
+
+    def live_pages(self) -> int:
+        """Distinct pages referenced by at least one slot (the serving
+        working set; excludes pages held only by a prefix cache)."""
+        return len({p for lst in self._slot_pages for p in lst})
+
     # -- mutation ---------------------------------------------------------
     def alloc(self, slot: int, n: int) -> List[int]:
-        """Append n pages to `slot`; returns the slot's FULL page list."""
+        """Append n private pages to `slot`; returns the slot's FULL page
+        list (shared pages first if any were attached)."""
         if n > len(self._free):
             raise OutOfPages(f"want {n} pages, {len(self._free)} free")
         owned = self._slot_pages[slot]
@@ -99,17 +119,92 @@ class PageAllocator:
             raise ValueError(f"slot {slot} would exceed max_seq "
                              f"({len(owned)} + {n} pages)")
         take = [self._free.pop() for _ in range(n)]
+        for p in take:
+            self._refs[p] = 1
         self.table[slot, len(owned):len(owned) + n] = take
         owned.extend(take)
         return list(owned)
 
+    def attach(self, slot: int, pages: List[int]) -> List[int]:
+        """Append already-referenced pages to `slot` (refcount + 1 each);
+        returns the slot's full page list.  The caller (the prefix cache)
+        guarantees the pages hold valid K/V for the slot's prompt prefix."""
+        owned = self._slot_pages[slot]
+        if len(owned) + len(pages) > self.max_pages_per_seq:
+            raise ValueError(f"slot {slot} would exceed max_seq "
+                             f"({len(owned)} + {len(pages)} pages)")
+        for p in pages:
+            if self._refs[p] <= 0:
+                raise ValueError(f"cannot attach free page {p}")
+            self._refs[p] += 1
+        self.table[slot, len(owned):len(owned) + len(pages)] = pages
+        owned.extend(pages)
+        return list(owned)
+
+    def unref(self, page: int):
+        """Drop one reference; the last reference frees the page."""
+        if page == 0 or self._refs[page] <= 0:
+            raise ValueError(f"unref of page {page} (refs "
+                             f"{int(self._refs[page])})")
+        self._refs[page] -= 1
+        if self._refs[page] == 0:
+            self._free.append(page)
+
+    def cow(self, slot: int, index: int):
+        """Replace the shared page at `slot` position `index` with a fresh
+        private copy (bookkeeping only - the engine copies the device-side
+        page data).  Returns (old_page, new_page)."""
+        if not self._free:
+            raise OutOfPages("copy-on-write needs a free page")
+        old = self._slot_pages[slot][index]
+        new = self._free.pop()
+        self._refs[new] = 1
+        self._slot_pages[slot][index] = new
+        self.table[slot, index] = new
+        self.unref(old)
+        return old, new
+
     def free_slot(self, slot: int):
-        """Return all of `slot`'s pages to the pool and null its table row."""
-        self._free.extend(reversed(self._slot_pages[slot]))
+        """Drop `slot`'s reference on every page it holds and null its
+        table row; pages nobody else references return to the pool."""
+        for p in reversed(self._slot_pages[slot]):
+            self.unref(p)
         self._slot_pages[slot] = []
         self.table[slot, :] = 0
+
+    def detach(self, slot: int) -> List[int]:
+        """Empty `slot`'s page list and table row WITHOUT touching
+        refcounts; returns the list.  The caller takes over each page's
+        reference (prefix-cache publish transfers them to the tree)."""
+        pages = self._slot_pages[slot]
+        self._slot_pages[slot] = []
+        self.table[slot, :] = 0
+        return pages
 
     def table_device(self) -> jnp.ndarray:
         """The block table as a device array (upload is max_batch * n_max
         int32s - trivial next to one decode step)."""
         return jnp.asarray(self.table)
+
+    # -- invariants --------------------------------------------------------
+    def check_invariants(self, tree_pages=()):
+        """Allocator accounting must balance: refcounts equal the number of
+        holders (slot memberships + prefix-cache membership), no page is
+        both free and referenced, and the null page is never handed out."""
+        tree = set(tree_pages)
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate page in free list"
+        assert 0 not in free, "null page on the free list"
+        counts: dict = {}
+        for lst in self._slot_pages:
+            for p in lst:
+                counts[p] = counts.get(p, 0) + 1
+        for p in tree:
+            counts[p] = counts.get(p, 0) + 1
+        assert 0 not in counts, "null page referenced"
+        for p in range(1, self.num_pages):
+            r = int(self._refs[p])
+            assert r == counts.get(p, 0), \
+                f"page {p}: refcount {r} != holders {counts.get(p, 0)}"
+            assert (p in free) == (r == 0), \
+                f"page {p} both free and referenced (refs {r})"

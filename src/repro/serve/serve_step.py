@@ -47,6 +47,20 @@ def make_paged_prefill_step(model: Model):
     return paged_prefill_step
 
 
+def make_suffix_prefill_step(model: Model):
+    """suffix_prefill_step(params, batch, cache, page_row) ->
+    (last_logits, cache, lens).  Prefix-cached prefill: batch["tokens"]:
+    (1, S_pad) holds only the UNCACHED prompt suffix (zero-padded), its
+    absolute start position in batch["offset"], the FULL prompt length in
+    batch["true_lens"]; page_row: (n_max,) the sequence's block-table row
+    with cached prefix pages first (serve/prefix_cache.py)."""
+
+    def suffix_prefill_step(params, batch, cache, page_row):
+        return model.prefill_suffix(params, batch, cache, page_row)
+
+    return suffix_prefill_step
+
+
 def sample_token(logits, *, temperature: float = 0.0,
                  key: Optional[jax.Array] = None):
     """logits: (B, 1, V) -> (B, 1) int32."""

@@ -158,7 +158,9 @@ def test_engine_backpressure_out_of_pages(rng):
 
 
 def test_engine_validates_config_and_requests(rng):
-    """max_seq must be a page multiple; requests must fit max_seq."""
+    """max_seq must be a page multiple; requests must fit max_seq; the
+    degenerate submissions fail at submit() with a clear error, never deep
+    inside prefill or the allocator."""
     cfg = get_smoke_config("granite-3-2b")
     m = build_model(cfg)
     params = m.init(rng)
@@ -169,20 +171,88 @@ def test_engine_validates_config_and_requests(rng):
                       ServeConfig(max_batch=2, max_seq=32, max_new_tokens=4))
     with pytest.raises(ValueError, match="does not fit"):
         eng.submit(list(range(1, 40)))
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit([])
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit([1, 2, 3], max_new_tokens=-1)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit([1, 2, 3], max_new_tokens=0)   # 0 is NOT "use default"
+    assert not eng.queue                  # nothing bad got enqueued
 
 
 def test_engine_rejects_unsatisfiable_reservation(rng):
     """A reservation larger than the whole pool can never be backpressured
-    into fitting - it must fail fast, not queue forever."""
+    into fitting - it must fail fast AT SUBMIT TIME, not queue forever or
+    die inside the allocator."""
     cfg = get_smoke_config("granite-3-2b")
     m = build_model(cfg)
     params = m.init(rng)
     eng = ServeEngine(m, params,
                       ServeConfig(max_batch=2, max_seq=64, max_new_tokens=8,
                                   paged=True, page_size=8, num_pages=4))
-    eng.submit(list(range(1, 25)))        # needs 4 pages; pool grants 3
     with pytest.raises(ValueError, match="pages"):
-        eng.run_until_done()
+        eng.submit(list(range(1, 25)))    # needs 4 pages; pool grants 3
+    assert not eng.queue
+
+
+# ===========================================================================
+# decode-path logit softcap: decode must match prefill (ROADMAP item)
+# ===========================================================================
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_decode_softcap_kernel_parity(impl, rng):
+    """flash_decode / paged_flash_decode with softcap vs a naive oracle."""
+    B, S, Hq, Hkv, D, ps, cap = 2, 32, 4, 2, 16, 8, 7.5
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, 1, Hq, D))
+    kc = jax.random.normal(ks[1], (B, S, Hkv, D))
+    vc = jax.random.normal(ks[2], (B, S, Hkv, D))
+    lens = jnp.array([S - 3, 5])
+
+    G = Hq // Hkv
+    qf = (q.astype(jnp.float32) / jnp.sqrt(D)).reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, kc.astype(jnp.float32))
+    s = cap * jnp.tanh(s / cap)
+    mask = jnp.arange(S)[None, :] < lens[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    want = jnp.einsum("bhgk,bkhd->bhgd", p, vc.astype(jnp.float32)
+                      ).reshape(B, 1, Hq, D)
+
+    got = ops.flash_decode(q, kc, vc, lens, logit_softcap=cap, impl=impl)
+    assert float(jnp.abs(got - want).max()) <= 1e-5
+    k_pages, v_pages, bt = _paged_from_dense(kc, vc, ps)
+    got_p = ops.paged_flash_decode(q, k_pages, v_pages, bt, lens,
+                                   logit_softcap=cap, impl=impl)
+    assert float(jnp.abs(got_p - want).max()) <= 1e-5
+    # softcap must actually change the result (guard against silent no-op)
+    plain = ops.flash_decode(q, kc, vc, lens, impl=impl)
+    assert float(jnp.abs(got - plain).max()) > 1e-3
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_decode_softcap_matches_prefill(paged, rng):
+    """With attn_logit_softcap > 0, decoding token t must produce the same
+    logits prefill produced at position t (dense AND paged decode path)."""
+    cfg = get_smoke_config("granite-3-2b").replace(dtype="float32",
+                                                   attn_logit_softcap=12.0)
+    m = build_model(cfg)
+    params = m.init(rng)
+    toks = jnp.array([[5, 7, 11, 13, 17, 19, 23, 2]])
+    logits_full, _ = m.forward(params, {"tokens": toks})
+    if paged:
+        cache = m.init_cache(1, 16, page_size=4, num_pages=9)
+        cache["block_table"] = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+        page_ids = jnp.asarray([1, 2], jnp.int32)   # 7 tokens pad to 8
+        batch = {"tokens": jnp.pad(toks[:, :7], ((0, 0), (0, 1))),
+                 "true_lens": jnp.asarray([7])}
+        _, cache, lens = m.prefill_paged(params, batch, cache, page_ids)
+    else:
+        cache = m.init_cache(1, 16)
+        _, cache, lens = m.prefill(params, {"tokens": toks[:, :7]}, cache)
+    logits_dec, _ = m.decode_step(params, toks[:, 7:8], lens, cache)
+    err = float(jnp.abs(logits_dec[:, 0] - logits_full[:, 7]).max())
+    assert err <= 1e-4, err
 
 
 def test_capacity_math_mixed_lengths():
