@@ -1,9 +1,12 @@
-"""Serving benchmark: dense vs paged KV cache, and prefix caching.
+"""Serving benchmark: dense vs paged KV cache, prefix caching, and
+token-budget chunked prefill.
 
     PYTHONPATH=src python benchmarks/serve_bench.py
     PYTHONPATH=src python benchmarks/serve_bench.py --quick   # CI-sized
     PYTHONPATH=src python benchmarks/serve_bench.py --prefix-trace \
         --json serve_prefix_bench.json
+    PYTHONPATH=src python benchmarks/serve_bench.py --chunked \
+        --json serve_chunked_bench.json
 
 Default mode serves the same mixed-length request trace (short / medium /
 long prompts, default 128 / 1024 / 3968 with max_seq=4096) through the
@@ -21,6 +24,16 @@ followers then run concurrently, attach the cached pages, and prefill
 only their tails.  Reported: prefix hit rate, prefill tokens computed /
 saved, and peak working-set pages - with bitwise-identical greedy outputs
 cache-on vs cache-off (asserted).
+
+--chunked serves the mixed trace through the paged engine with monolithic
+admission-time prefill vs the token-budget scheduler (chunked prefill
+mixed into decode ticks, docs/scheduling.md).  Reported: p50/p95 TTFT and
+time-between-tokens, in wall seconds and in deterministic WORK-CLOCK
+tokens (total prefill + decode tokens executed between two events - the
+exact size of a scheduling bubble).  Asserted: byte-identical greedy
+outputs, a hard per-tick budget ceiling, and lower p95 work-clock TTFT
+and TBT for chunked (decodes no longer stall behind whole-prompt
+prefills).
 
 Output: CSV rows per mode; --json additionally writes the full metrics
 dict (CI uploads it as a workflow artifact).
@@ -57,6 +70,146 @@ def run_mode(model, params, scfg, prompts, max_new):
             "kv_bytes": eng.kv_cache_bytes(),
             "peak_pages": eng.peak_pages,
             "pool_pages": scfg.pool_pages() if scfg.paged else 0}
+
+
+# ===========================================================================
+# chunked-prefill trace (monolithic vs token-budget scheduler)
+# ===========================================================================
+
+def make_wave_trace(rng, vocab, lens, waves):
+    """`waves` arrival waves, each [longest, *shorter lens] submitted the
+    same tick - the bubble-inducing shape: every wave's long prompt lands
+    at the head of the FIFO queue while earlier waves are mid-decode and
+    this wave's short prompts queue behind it."""
+    order = sorted(lens, reverse=True)
+    arrivals = []
+    for w in range(waves):
+        for n in order:
+            arrivals.append((w * 4, rng.integers(1, vocab,
+                                                 size=n).tolist()))
+    return arrivals
+
+
+def run_latency_mode(model, params, scfg, arrivals, max_new, short_len):
+    """Serve a timed-arrival trace and report latency stats: p50/p95 TTFT,
+    time-between-tokens, and per-token tick-work stalls (deterministic
+    bubble sizes - see docs/scheduling.md), wall-clock and work-clock."""
+    eng = ServeEngine(model, params, scfg)
+    pending = list(arrivals)
+    uids_short = []
+    t0 = time.time()
+    tick = 0
+    done = []
+    while pending or eng.queue or any(s is not None for s in eng.slots):
+        while pending and pending[0][0] <= tick:
+            _, prompt = pending.pop(0)
+            uid = eng.submit(prompt, max_new_tokens=max_new)
+            if len(prompt) <= short_len:
+                uids_short.append(uid)
+        done.extend(eng.tick())
+        tick += 1
+        assert tick < 500_000, "trace did not drain"
+    dt = time.time() - t0
+    assert len(done) == len(arrivals), (len(done), len(arrivals))
+    outs = {r.uid: r.out_tokens for r in done}
+    st = eng.stats()
+    # TTFT of the interactive class: short prompts that queued behind a
+    # long prefill - the requests chunking is supposed to protect
+    short_reqs = [r for r in done if r.uid in uids_short]
+    short_ttft = [r.ttft_work() for r in short_reqs]
+    toks = sum(len(t) for t in outs.values())
+    row = {"requests": len(done), "tokens": toks, "seconds": dt,
+           "tok_per_s": toks / max(dt, 1e-9),
+           "prefill_tokens": st["prefill_tokens"],
+           "tick_token_budget": st["tick_token_budget"],
+           "short_ttft_work_p95": float(np.percentile(short_ttft, 95))}
+    row.update({k: st[k] for k in (
+        "ticks", "chunks_run", "max_tick_tokens",
+        "ttft_wall_p50", "ttft_wall_p95", "tbt_wall_p50", "tbt_wall_p95",
+        "ttft_work_p50", "ttft_work_p95", "tbt_work_p50", "tbt_work_p95",
+        "stall_work_p50", "stall_work_p95", "stall_work_max")})
+    return outs, row
+
+
+def run_chunked_trace(args, out_json):
+    """Mixed 128/1k/4k wave trace through the paged engine: monolithic
+    admission-time prefill vs chunked prefill under a per-tick token
+    budget.  Asserted: byte-identical greedy outputs; tick_token_budget a
+    hard per-tick ceiling the monolithic engine blows through; lower p95
+    tick-work stalls (time-between-tokens for in-flight decodes) and
+    lower p95 TTFT for short prompts queued behind long prefills."""
+    # float32 keeps greedy argmax ties out of the comparison
+    cfg = get_smoke_config(args.arch).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    waves = max(args.requests // len(args.lens), 2)
+    arrivals = make_wave_trace(rng, cfg.vocab_size, args.lens, waves)
+    short_len = sorted(args.lens)[-2]          # everything but the longest
+    per_req = pages_needed(max(args.lens) + args.max_new, args.page_size)
+    # a latency trace, so no slot or page contention: every request admits
+    # the tick it arrives and the measured TTFT/TBT gaps are pure PREFILL
+    # SCHEDULING (the default trace exercises backpressure instead)
+    max_batch = len(arrivals)
+    num_pages = len(arrivals) * per_req + 1
+    # room for the oldest request's guaranteed chunk PLUS a
+    # shortest-remaining-first chunk every tick (serve/scheduler.py)
+    budget = args.tick_budget or max_batch + 2 * args.prefill_chunk
+    base = dict(max_batch=max_batch, max_seq=args.max_seq,
+                max_new_tokens=args.max_new, paged=True,
+                page_size=args.page_size, num_pages=num_pages)
+    cfg_mono = ServeConfig(**base)
+    cfg_chunk = ServeConfig(**base, chunked=True,
+                            prefill_chunk=args.prefill_chunk,
+                            tick_token_budget=budget)
+
+    print(f"# arch={cfg.name} max_batch={max_batch} lens={args.lens} "
+          f"waves={waves} max_new={args.max_new} "
+          f"page={args.page_size} chunk={args.prefill_chunk} "
+          f"budget={budget}")
+    print("mode,requests,tokens,seconds,tok_per_s,ticks,chunks_run,"
+          "max_tick_tokens,stall_work_p95,short_ttft_work_p95,"
+          "tbt_wall_p95,ttft_wall_p95")
+    rows, outs = {}, {}
+    for mode, scfg in (("monolithic", cfg_mono), ("chunked", cfg_chunk)):
+        outs[mode], r = run_latency_mode(model, params, scfg, arrivals,
+                                         args.max_new, short_len)
+        rows[mode] = r
+        print(f"{mode},{r['requests']},{r['tokens']},{r['seconds']:.2f},"
+              f"{r['tok_per_s']:.1f},{r['ticks']},{r['chunks_run']},"
+              f"{r['max_tick_tokens']},{r['stall_work_p95']:.0f},"
+              f"{r['short_ttft_work_p95']:.0f},"
+              f"{r['tbt_wall_p95'] * 1e3:.1f}ms,"
+              f"{r['ttft_wall_p95'] * 1e3:.1f}ms")
+
+    mono, chunk = rows["monolithic"], rows["chunked"]
+    print(f"# p95 tick-work stall {chunk['stall_work_p95']:.0f} vs "
+          f"{mono['stall_work_p95']:.0f} tokens, short-prompt p95 TTFT "
+          f"{chunk['short_ttft_work_p95']:.0f} vs "
+          f"{mono['short_ttft_work_p95']:.0f} work-tokens, max tick "
+          f"{chunk['max_tick_tokens']} vs {mono['max_tick_tokens']}")
+    assert outs["chunked"] == outs["monolithic"], \
+        "chunked scheduling changed greedy outputs"
+    assert chunk["max_tick_tokens"] <= budget, \
+        "tick_token_budget exceeded"
+    assert mono["max_tick_tokens"] > budget, \
+        "monolithic trace never exceeded the budget - trace too easy to " \
+        "show a scheduling bubble"
+    assert chunk["stall_work_p95"] < mono["stall_work_p95"], \
+        "chunked scheduling must lower p95 decode stalls (TBT)"
+    assert chunk["short_ttft_work_p95"] < mono["short_ttft_work_p95"], \
+        "chunked scheduling must lower p95 TTFT for short prompts"
+    rows["savings"] = {
+        "stall_work_p95_ratio": chunk["stall_work_p95"]
+        / max(mono["stall_work_p95"], 1e-9),
+        "short_ttft_work_p95_ratio": chunk["short_ttft_work_p95"]
+        / max(mono["short_ttft_work_p95"], 1e-9),
+        "identical_greedy_outputs": True,
+    }
+    if out_json:
+        Path(out_json).write_text(json.dumps(rows, indent=2))
+        print(f"# wrote {out_json}")
+    return rows
 
 
 # ===========================================================================
@@ -176,6 +329,16 @@ def main(argv=None):
     ap.add_argument("--prefix-trace", action="store_true",
                     help="shared-prefix trace: paged serving with prefix "
                          "caching off vs on")
+    ap.add_argument("--chunked", action="store_true",
+                    help="mixed trace: monolithic admission prefill vs the "
+                         "token-budget chunked-prefill scheduler, with "
+                         "p50/p95 TTFT and time-between-tokens")
+    ap.add_argument("--prefill-chunk", type=int, default=512,
+                    help="chunked trace: tokens per prefill chunk (page "
+                         "multiple)")
+    ap.add_argument("--tick-budget", type=int, default=0,
+                    help="chunked trace: tokens of work per tick "
+                         "(0 = max_batch + 2 * prefill_chunk)")
     ap.add_argument("--groups", type=int, default=2,
                     help="prefix trace: distinct shared prefixes")
     ap.add_argument("--followers", type=int, default=3,
@@ -191,9 +354,12 @@ def main(argv=None):
         args.max_seq, args.lens = 512, [64, 128, 448]
         args.max_new, args.page_size = 16, 16
         args.shared_len, args.tail_len = 128, 32
+        args.prefill_chunk = 64
 
     if args.prefix_trace:
         return run_prefix_trace(args, args.json)
+    if args.chunked:
+        return run_chunked_trace(args, args.json)
 
     cfg = get_smoke_config(args.arch)
     model = build_model(cfg)

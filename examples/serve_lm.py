@@ -8,6 +8,12 @@ layout for comparison.  Both modes print tokens/s and allocated KV bytes.
 
     PYTHONPATH=src python examples/serve_lm.py --arch gemma3-4b --requests 12
     PYTHONPATH=src python examples/serve_lm.py --dense
+    PYTHONPATH=src python examples/serve_lm.py --chunked  # token-budget
+        # scheduler: prefill chunks interleave with decode ticks
+        # (docs/scheduling.md); greedy outputs match the monolithic
+        # schedule exactly in float32 (bf16 can flip an argmax tie - the
+        # chunk kernel and the monolithic prefill reduce in different
+        # orders)
 
 Expected output (CPU, smoke-scale model; numbers vary by machine):
 
@@ -42,7 +48,16 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=0,
                     help="page pool size (0 = dense-equivalent capacity)")
+    ap.add_argument("--chunked", action="store_true",
+                    help="token-budget scheduler: chunked prefill mixed "
+                         "into decode ticks (paged only)")
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--tick-budget", type=int, default=0,
+                    help="tokens of work per tick "
+                         "(0 = max_batch + prefill_chunk)")
     args = ap.parse_args()
+    if args.chunked and args.dense:
+        ap.error("--chunked needs the paged cache (drop --dense)")
 
     cfg = get_smoke_config(args.arch)
     model = build_model(cfg)
@@ -52,7 +67,11 @@ def main():
                                   max_new_tokens=args.max_new,
                                   paged=not args.dense,
                                   page_size=args.page_size,
-                                  num_pages=args.num_pages))
+                                  num_pages=args.num_pages,
+                                  chunked=args.chunked,
+                                  prefill_chunk=args.prefill_chunk,
+                                  tick_token_budget=args.tick_budget or
+                                  args.max_batch + args.prefill_chunk))
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -66,9 +85,17 @@ def main():
     kv = f"paged KV: {eng.kv_cache_bytes() / 1e6:.2f} MB, " \
          f"peak {eng.peak_pages} pages" if not args.dense \
         else f"dense KV: {eng.kv_cache_bytes() / 1e6:.2f} MB"
+    sched = "chunked prefill" if args.chunked else "monolithic prefill"
     print(f"served {len(done)} requests, {tokens} tokens "
           f"in {dt:.1f}s ({tokens/dt:.1f} tok/s, "
-          f"continuous batching over {args.max_batch} slots, {kv})")
+          f"continuous batching over {args.max_batch} slots, {sched}, "
+          f"{kv})")
+    if args.chunked:
+        st = eng.stats()
+        print(f"  budget {st['tick_token_budget']} tok/tick, max tick "
+              f"{st['max_tick_tokens']}, {st['chunks_run']} chunks, p95 "
+              f"TTFT {st['ttft_work_p95']:.0f} work-tok / "
+              f"{st['ttft_wall_p95'] * 1e3:.0f} ms")
     for r in done[:4]:
         print(f"  req {r.uid}: {r.out_tokens}")
 

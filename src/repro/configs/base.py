@@ -189,6 +189,23 @@ class ServeConfig:
     prefill_chunk: int = 512
     max_new_tokens: int = 64
     temperature: float = 0.0    # 0 = greedy
+    seed: int = 0               # PRNG seed for temperature > 0 sampling
+    # finishing a request before max_new_tokens: eos_id (engine-wide) and/or
+    # per-request submit(..., stop_tokens=...) end generation the tick the
+    # token is produced, freeing its pages immediately
+    eos_id: Optional[int] = None
+
+    # --- token-budget scheduler (serve/scheduler.py) ------------------------
+    # chunked=True replaces monolithic admission-time prefill with
+    # Sarathi-style chunked prefill mixed into decode ticks: every tick gets
+    # `tick_token_budget` tokens of work; each decoding slot consumes 1 and
+    # the remainder is filled with prompt chunks (multiples of
+    # `prefill_chunk`), so decode latency stays flat while long prompts
+    # stream in.  Paged mode only (chunks prefill through the offset-causal
+    # block-table kernel, kernels/paged_prefill.py).
+    chunked: bool = False
+    tick_token_budget: int = 0  # tokens of work (decode + prefill) per tick
+    admission_policy: str = "fifo"   # fifo | sjf (shortest prompt first)
 
     # --- paged KV cache (serve/paged_cache.py) ------------------------------
     # paged=True stores K/V in a global page pool indexed through a block
@@ -209,6 +226,37 @@ class ServeConfig:
     # unreferenced cached pages after completions (0 = evict only when an
     # admission would otherwise run out of pages)
     prefix_evict_watermark: float = 0.0
+
+    def validate(self) -> "ServeConfig":
+        """Scheduler-level config validation (called by ServeEngine).
+
+        Degenerate knob combinations fail HERE with a clear error instead
+        of hanging the tick loop: a chunked engine whose budget cannot fit
+        one decode sweep plus one prefill chunk would starve prefill
+        forever (decode slots consume the whole budget every tick)."""
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, "
+                             f"got {self.temperature}")
+        if self.admission_policy not in ("fifo", "sjf"):
+            raise ValueError(f"admission_policy must be 'fifo' or 'sjf', "
+                             f"got {self.admission_policy!r}")
+        if self.chunked:
+            if not self.paged:
+                raise ValueError(
+                    "chunked prefill scheduling requires paged=True (chunks "
+                    "prefill through the block-table kernel)")
+            if self.prefill_chunk < 1 or self.prefill_chunk % self.page_size:
+                raise ValueError(
+                    f"prefill_chunk ({self.prefill_chunk}) must be a "
+                    f"positive multiple of page_size ({self.page_size}) so "
+                    f"every chunk starts on a page boundary")
+            if self.tick_token_budget < self.max_batch + self.prefill_chunk:
+                raise ValueError(
+                    f"tick_token_budget ({self.tick_token_budget}) must be "
+                    f">= max_batch + prefill_chunk "
+                    f"({self.max_batch} + {self.prefill_chunk}) or prefill "
+                    f"can starve behind a full decode batch")
+        return self
 
     def pages_per_seq(self) -> int:
         return pages_for_tokens(self.max_seq, self.page_size)

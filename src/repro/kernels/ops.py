@@ -215,14 +215,17 @@ def paged_prefill_attention(q, k_pages, v_pages, page_row, q_offset, *,
                             window: int = 0, logit_softcap: float = 0.0,
                             scale: Optional[float] = None,
                             impl: Optional[str] = None) -> jax.Array:
-    """Suffix-prefill attention over a partially cached block table.
+    """Mid-prompt chunk-prefill attention over a partially filled block
+    table.
 
-    q: (1,S,Hq,D) suffix queries at absolute positions q_offset + arange(S)
-    (suffix K/V already written into its pages); page_row: (n_max,) the
-    sequence's block-table row.  Each row attends causally over the cached
-    prefix pages and the suffix itself.  The Pallas path walks the row from
-    SMEM with the (m, l, acc) merge VMEM-resident (kernels/paged_prefill.py);
-    the ref path gathers pages and applies the offset causal mask."""
+    q: (1,S,Hq,D) chunk queries at absolute positions q_offset + arange(S)
+    (chunk K/V already written into its pages) - the uncached suffix after
+    a prefix-cache hit, or any chunk of a token-budget scheduled prefill;
+    page_row: (n_max,) the sequence's block-table row.  Each row attends
+    causally over every earlier position and the chunk itself.  The Pallas
+    path walks the row from SMEM with the (m, l, acc) merge VMEM-resident
+    (kernels/paged_prefill.py); the ref path gathers pages and applies the
+    offset causal mask."""
     impl = impl or default_impl()
     if impl == "pallas":
         from . import paged_prefill as pp

@@ -1,18 +1,30 @@
-"""Pallas TPU paged suffix prefill: new prompt tokens vs a partially
-cached paged KV pool.
+"""Pallas TPU paged chunk prefill: a mid-prompt run of new tokens vs a
+partially filled paged KV pool.
 
-Prefix caching (serve/prefix_cache.py) admits a request whose leading
-prompt pages are already resident in the page pool; only the uncached
-suffix is prefilled.  The suffix queries sit at absolute positions
-``q_offset + i`` and must attend causally over EVERYTHING before them -
-the cached prefix pages AND the suffix's own K/V, both reached through
-the sequence's block-table row.
+Two callers share this kernel, both handing it queries at absolute
+positions ``q_offset + i`` whose K/V for positions < q_offset is already
+resident in the page pool:
+
+  prefix caching   (serve/prefix_cache.py) - the uncached SUFFIX after
+                   the longest cached prefix; q_offset = cached tokens.
+  chunked prefill  (serve/scheduler.py) - chunk i of a token-budget
+                   scheduled prompt; q_offset = tokens written by earlier
+                   chunks (plus any cached prefix).  Composing chunks
+                   left to right reproduces the monolithic prefill
+                   exactly - this is the request-level analogue of the
+                   paper's fine-grained attention chunking: small units
+                   that interleave with neighbors instead of stalling
+                   them.
+
+Either way the queries must attend causally over EVERYTHING before them -
+earlier pages AND the chunk's own K/V, both reached through the
+sequence's block-table row.
 
 Same construction as paged_flash_decode (kernels/flash_decode.py): the
 block-table row is scalar-prefetched into SMEM, the BlockSpec index map
 IS the page-table walk, and the running (m, l, acc) online-softmax state
 stays in VMEM scratch across KV pages.  The only new ingredient is a 2-D
-causal mask - each suffix row r masks columns > q_offset + r - computed
+causal mask - each chunk row r masks columns > q_offset + r - computed
 branch-free from the prefetched offset.
 
 The grid walks the FULL block-table row (n_max pages, a static shape);
@@ -40,10 +52,10 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _suffix_kernel(pr_ref, off_ref, q_ref, k_ref, v_ref, o_ref, acc_ref,
-                   m_ref, l_ref, *, page_size: int, window: int,
-                   scale: float, softcap: float, gq: int, s_suf: int):
-    """pr_ref: (n_max,) block-table row, off_ref: (1,) suffix start - both
+def _chunk_kernel(pr_ref, off_ref, q_ref, k_ref, v_ref, o_ref, acc_ref,
+                  m_ref, l_ref, *, page_size: int, window: int,
+                  scale: float, softcap: float, gq: int, s_suf: int):
+    """pr_ref: (n_max,) block-table row, off_ref: (1,) chunk start - both
     scalar-prefetched; k_ref/v_ref hold page j of this sequence (the index
     map already walked the table)."""
     j = pl.program_id(1)
@@ -57,7 +69,7 @@ def _suffix_kernel(pr_ref, off_ref, q_ref, k_ref, v_ref, o_ref, acc_ref,
 
     off = off_ref[0]
     k_first = j * page_size
-    # last suffix row attends through position off + s_suf - 1; pages fully
+    # last chunk row attends through position off + s_suf - 1; pages fully
     # past that frontier contribute nothing (and may be the null page)
     run = k_first < off + s_suf
     if window > 0:
@@ -71,7 +83,7 @@ def _suffix_kernel(pr_ref, off_ref, q_ref, k_ref, v_ref, o_ref, acc_ref,
                                 preferred_element_type=jnp.float32)
         if softcap > 0.0:
             s = softcap * jnp.tanh(s / softcap)
-        # row r of the flattened (s_suf * G) block is query s_suf-index
+        # row r of the flattened (s_suf * G) block is query chunk-index
         # r // gq at absolute position off + r // gq
         row = off + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // gq
         col = k_first + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -94,16 +106,18 @@ def paged_prefill_attention(q, k_pages, v_pages, page_row, q_offset, *,
                             window: int = 0,
                             scale: Optional[float] = None,
                             logit_softcap: float = 0.0) -> jax.Array:
-    """Suffix-prefill attention through the block table.
+    """Mid-prompt chunk-prefill attention through the block table.
 
-    q:           (1, S, Hq, D) suffix queries at absolute positions
-                 q_offset + arange(S); suffix K/V must already be written
-                 into their pages (attn_prefill_suffix_paged does both)
+    q:           (1, S, Hq, D) chunk queries at absolute positions
+                 q_offset + arange(S); the chunk's K/V must already be
+                 written into its pages (attn_prefill_chunk_paged does
+                 both), as must all K/V for positions < q_offset (cached
+                 prefix pages and/or earlier chunks)
     k/v_pages:   (P, page_size, Hkv, D) global page pool
     page_row:    (n_max,) int32 - this sequence's block-table row,
                  position-major; entries past the reservation point at the
                  null page 0 and are never touched by the causal mask
-    q_offset:    scalar int32, absolute position of the first suffix token
+    q_offset:    scalar int32, absolute position of the first chunk token
     Returns (1, S, Hq, D).
     """
     _, S, Hq, D = q.shape
@@ -116,7 +130,7 @@ def paged_prefill_attention(q, k_pages, v_pages, page_row, q_offset, *,
 
     # head-major GQA grouping, one grid row per KV head
     qg = q[0].reshape(S, Hkv, G, D).transpose(1, 0, 2, 3)    # (Hkv,S,G,D)
-    kernel = functools.partial(_suffix_kernel, page_size=ps, window=window,
+    kernel = functools.partial(_chunk_kernel, page_size=ps, window=window,
                                scale=scale, softcap=logit_softcap, gq=G,
                                s_suf=S)
     grid_spec = pltpu.PrefetchScalarGridSpec(

@@ -223,18 +223,22 @@ def paged_prefill_attention(q, k_pages, v_pages, page_row, q_offset, *,
                             scale: Optional[float] = None,
                             window: int = 0,
                             logit_softcap: float = 0.0) -> jax.Array:
-    """Suffix-prefill attention through a block table (reference oracle).
+    """Mid-prompt chunk-prefill attention through a block table (reference
+    oracle).
 
-    q: (1, S, Hq, D) suffix queries at absolute positions q_offset +
-    arange(S); k/v_pages: (P, page_size, Hkv, D) global pool; page_row:
-    (n_max,) this sequence's block-table row (suffix K/V already written
-    into its pages).  Each query row attends causally over positions
-    0..q_offset+row - cached prefix pages and the suffix itself.
+    q: (1, S, Hq, D) chunk queries at absolute positions q_offset +
+    arange(S) - the uncached suffix after a prefix-cache hit, or any chunk
+    of a token-budget scheduled prefill; k/v_pages: (P, page_size, Hkv, D)
+    global pool; page_row: (n_max,) this sequence's block-table row (the
+    chunk's K/V already written into its pages, as is all K/V for
+    positions < q_offset).  Each query row attends causally over positions
+    0..q_offset+row - earlier pages and the chunk itself, so composing
+    chunks left to right matches one monolithic causal prefill exactly.
 
     Gathers the row's pages into a contiguous strip and applies the offset
-    causal mask - the ground truth the Pallas suffix kernel
+    causal mask - the ground truth the Pallas chunk kernel
     (kernels/paged_prefill.py) is validated against, and the portable
-    prefix-cached serving path off-TPU.
+    chunked / prefix-cached serving path off-TPU.
     """
     _, S, Hq, D = q.shape
     _, ps, Hkv, _ = k_pages.shape

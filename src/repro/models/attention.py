@@ -146,19 +146,22 @@ def attn_decode_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
     return y, k_pages, v_pages
 
 
-def attn_prefill_suffix_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
-                              page_row, offset, *, window: int = 0,
-                              impl: Optional[str] = None):
-    """Prefill the UNCACHED suffix of one sequence's prompt into its pages.
+def attn_prefill_chunk_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
+                             page_row, offset, *, window: int = 0,
+                             impl: Optional[str] = None):
+    """Prefill one MID-PROMPT chunk of one sequence's prompt into its pages.
 
-    Prefix caching (serve/prefix_cache.py) placed the cached prompt pages
-    at the front of the sequence's block-table row; x: (1, S, D) holds the
-    remaining suffix tokens at absolute positions offset + arange(S) (S a
-    multiple of the page size unless the whole prompt was cached; trailing
-    pad K/V is masked by `lens` at decode time).  Suffix K/V is scattered
-    token-by-token through the block-table row - the suffix need not start
-    on a page boundary - then the suffix queries attend over cached pages
-    AND the fresh suffix via the paged suffix-attention kernel.
+    x: (1, S, D) holds a contiguous run of prompt tokens at absolute
+    positions offset + arange(S) - the uncached suffix after a prefix-cache
+    hit (serve/prefix_cache.py), or any chunk of a token-budget scheduled
+    prefill (serve/scheduler.py).  Pages already holding K/V for positions
+    < offset (cached prefix + earlier chunks) sit at the front of the
+    block-table row; trailing pad K/V is masked by `lens` at decode time.
+    Chunk K/V is scattered token-by-token through the block-table row - a
+    chunk need not start on a page boundary - then the chunk queries
+    attend over every earlier position AND the chunk itself via the
+    offset-causal paged kernel (kernels/paged_prefill.py), so composing
+    chunks left to right is exact.
     Returns (y, k_pages, v_pages)."""
     q, k, v = _qkv(params, x, cfg)
     S = x.shape[1]
@@ -177,6 +180,10 @@ def attn_prefill_suffix_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
                                     impl=impl)
     y = dense(params["wo"], o.reshape(1, S, cfg.n_heads * cfg.head_dim))
     return y, k_pages, v_pages
+
+
+# the prefix-cache suffix is the final-chunk special case
+attn_prefill_suffix_paged = attn_prefill_chunk_paged
 
 
 def attn_decode(params, x, cfg: ModelConfig, cache_k, cache_v, lens, *,

@@ -37,6 +37,12 @@ class Model:
     # computed, attending over cached pages via the block table
     # (serve/prefix_cache.py owns the host-side radix tree)
     prefill_suffix: Optional[Callable] = None
+    # mid-prompt chunk prefill for token-budget scheduling: any contiguous
+    # chunk of a prompt prefills through the same offset-causal block-table
+    # kernel, attending over everything already written (cached prefix +
+    # earlier chunks).  The suffix above is the final-chunk special case.
+    # (serve/scheduler.py owns the host-side chunk planning)
+    prefill_chunk: Optional[Callable] = None
 
 
 def build_model(cfg: ModelConfig) -> Model:
@@ -228,39 +234,51 @@ def build_model(cfg: ModelConfig) -> Model:
         logits = unembed(params["tok"], x_last, cfg)
         return logits.astype(jnp.float32), cache, lens
 
-    def prefill_suffix(params, batch, cache, page_row, *, impl=None):
-        """Prefill the UNCACHED suffix of one sequence's prompt (B=1).
+    def prefill_chunk(params, batch, cache, page_row, *, impl=None):
+        """Prefill one MID-PROMPT chunk of one sequence's prompt (B=1).
 
-        batch: {"tokens": (1, S_pad) suffix tokens (zero-padded),
-                "offset": (1,) absolute position of the first suffix token,
-                "true_lens": (1,) FULL prompt length}; page_row: (n_max,)
-        the sequence's block-table row (cached prefix pages first).
-        Suffix queries attend over cached pages and the suffix itself.
-        Returns (last_logits, cache, lens) with lens = the full prompt
-        length."""
+        batch: {"tokens": (1, S_pad) chunk tokens (zero-padded),
+                "offset": (1,) absolute position of the chunk's first token,
+                "true_lens": (1,) cursor AFTER the chunk's last real token
+                (= offset + real chunk length)}; page_row: (n_max,) the
+        sequence's block-table row.  Chunk queries attend causally over
+        everything already resident - cached prefix pages, earlier chunks'
+        K/V, and the chunk itself - through the offset-causal block-table
+        kernel (kernels/paged_prefill.py), so composing chunks left to
+        right reproduces the monolithic prefill exactly.
+        Returns (chunk_last_logits, cache, cursor): the logits of the
+        chunk's LAST real token (meaningful for the final chunk, whose
+        cursor equals the prompt length and whose logits seed decoding).
+
+        The prefix-cache suffix path is the final-chunk special case:
+        cursor == full prompt length (Model.prefill_suffix aliases this)."""
         if fam not in ("dense", "moe", "vlm"):
             raise ValueError(
-                f"suffix prefill needs an attention family, got {fam}")
+                f"chunked prefill needs an attention family, got {fam}")
         tokens = batch["tokens"]
         B, S = tokens.shape
         off = jnp.asarray(batch["offset"], jnp.int32)[0]
         x = embed(params["tok"], tokens, cfg)
         if not cfg.use_rope and not cfg.rwkv:
-            # absolute sinusoidal positions start at the suffix offset
+            # absolute sinusoidal positions start at the chunk offset
             tbl = sinusoidal_positions(65536, cfg.d_model)
             x = x + jnp.take(tbl, jnp.minimum(off + jnp.arange(S), 65535),
                              axis=0)[None].astype(x.dtype)
         x = constrain(x, "btd")
-        x, cache = T.stack_prefill_suffix_paged(params["blocks"], x, cfg,
-                                                cache, page_row, off,
-                                                impl=impl)
+        x, cache = T.stack_prefill_chunk_paged(params["blocks"], x, cfg,
+                                               cache, page_row, off,
+                                               impl=impl)
         lens = jnp.asarray(batch["true_lens"], jnp.int32)
         x = apply_norm(params["final_norm"], x, cfg)
-        # the last REAL prompt token sits at suffix index lens - offset - 1
+        # the chunk's last REAL token sits at chunk index lens - offset - 1
         x_last = jnp.take_along_axis(x, (lens - off - 1)[:, None, None],
                                      axis=1)
         logits = unembed(params["tok"], x_last, cfg)
         return logits.astype(jnp.float32), cache, lens
+
+    # prefix-cached suffix prefill IS a chunk prefill whose cursor is the
+    # full prompt length - kept under its established name
+    prefill_suffix = prefill_chunk
 
     def _fill_cross_cache(params, cache, enc_out):
         from .layers import dense
@@ -353,4 +371,5 @@ def build_model(cfg: ModelConfig) -> Model:
                  init_cache=init_cache, prefill=prefill,
                  decode_step=decode_step,
                  prefill_paged=prefill_paged if is_attn else None,
-                 prefill_suffix=prefill_suffix if is_attn else None)
+                 prefill_suffix=prefill_suffix if is_attn else None,
+                 prefill_chunk=prefill_chunk if is_attn else None)

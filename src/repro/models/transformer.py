@@ -25,8 +25,8 @@ from ..compat import optimization_barrier
 from ..configs.base import ModelConfig
 from ..sharding import constrain
 from .attention import (attn_decode, attn_decode_paged, attn_forward,
-                        attn_init, attn_prefill, attn_prefill_paged,
-                        attn_prefill_suffix_paged)
+                        attn_init, attn_prefill, attn_prefill_chunk_paged,
+                        attn_prefill_paged)
 from .layers import apply_norm, grad_cast, mlp, mlp_init, norm_init, pdtype
 from .mamba2 import (mamba2_decode, mamba2_forward, mamba2_init,
                      mamba2_init_state, mamba2_prefill)
@@ -214,14 +214,16 @@ def stack_prefill_paged(params, x, cfg: ModelConfig, cache, page_ids, *,
                "block_table": cache["block_table"]}
 
 
-def stack_prefill_suffix_paged(params, x, cfg: ModelConfig, cache, page_row,
-                               offset, *, impl=None):
-    """Prefix-cached paged prefill of ONE sequence (B=1): x holds only the
-    UNCACHED prompt suffix, at absolute positions offset + arange(S).
-    page_row: (n_max,) the sequence's block-table row - cached prefix pages
-    first, then the freshly allocated suffix/generation pages.  The block
-    table itself is host-managed (serve/prefix_cache.py) and passes through
-    untouched."""
+def stack_prefill_chunk_paged(params, x, cfg: ModelConfig, cache, page_row,
+                              offset, *, impl=None):
+    """Paged prefill of ONE mid-prompt chunk of ONE sequence (B=1): x holds
+    a contiguous run of prompt tokens at absolute positions
+    offset + arange(S) - the uncached suffix after a prefix-cache hit, or
+    any budget-scheduled chunk (serve/scheduler.py).  page_row: (n_max,)
+    the sequence's block-table row - pages already holding K/V (cached
+    prefix + earlier chunks) first, then the pages this chunk and decode
+    will fill.  The block table itself is host-managed
+    (serve/paged_cache.py) and passes through untouched."""
     flags = _layer_windows(cfg)
 
     def body(x, xs):
@@ -230,15 +232,19 @@ def stack_prefill_suffix_paged(params, x, cfg: ModelConfig, cache, page_row,
         h_in = apply_norm(p["n1"], x, cfg)
         h, kp, vp = _windowed(
             cfg, flag,
-            lambda w: attn_prefill_suffix_paged(p["attn"], h_in, cfg, kp, vp,
-                                                page_row, offset, window=w,
-                                                impl=impl))
+            lambda w: attn_prefill_chunk_paged(p["attn"], h_in, cfg, kp, vp,
+                                               page_row, offset, window=w,
+                                               impl=impl))
         return _ffn_tail(p, x + h, cfg), (kp, vp)
 
     x, (kp, vp) = jax.lax.scan(
         body, x, (params, cache["k_pages"], cache["v_pages"], flags))
     return x, {"k_pages": kp, "v_pages": vp,
                "block_table": cache["block_table"]}
+
+
+# the prefix-cache suffix is the final-chunk special case
+stack_prefill_suffix_paged = stack_prefill_chunk_paged
 
 
 def stack_decode_paged(params, x, cfg: ModelConfig, cache, lens, *,

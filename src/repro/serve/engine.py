@@ -1,9 +1,12 @@
 """Continuous-batching serve engine (dense or paged KV cache).
 
 Slot-based scheduler: up to `max_batch` concurrent sequences share one
-batched KV cache; new requests are prefilled into free slots; every tick
-runs one batched decode step for all active slots; finished sequences free
-their slot immediately (no head-of-line blocking).
+batched KV cache; every tick runs one batched decode step for all decoding
+slots; finished sequences free their slot immediately (no head-of-line
+blocking).  Queueing, admission policy (FIFO / shortest-prompt-first),
+chunk planning, and latency accounting live in the token-budget scheduler
+(serve/scheduler.py); this module owns all device state and page
+bookkeeping.
 
 Two cache modes (ServeConfig.paged):
 
@@ -17,28 +20,41 @@ Two cache modes (ServeConfig.paged):
          cannot cover it the request simply stays queued (backpressure) -
          nothing mid-flight can run out of pages.
 
-Prefill: attention families run one batched prefill over the (padded)
-prompt - real length travels in batch["true_lens"] so logits come from the
-last REAL token; recurrent families (ssm / hybrid / audio) keep the exact
-token-by-token path.
+Two prefill schedules (ServeConfig.chunked):
+
+  monolithic  (default) the whole prompt prefills in ONE batched pass at
+         admission - simple, but a 4k-token admission stalls every active
+         decode slot for the full prefill (a request-level pipeline
+         bubble, the serving analogue of the tier stalls the paper's
+         3D-FlashAttention chunking removes).
+  chunked  each tick gets ServeConfig.tick_token_budget tokens of work:
+         decoding slots consume 1 each, and the remainder is filled with
+         prompt chunks (multiples of ServeConfig.prefill_chunk) for
+         PREFILLING slots through the offset-causal block-table kernel
+         (kernels/paged_prefill.py) - decode latency stays flat while
+         long prompts stream in.  Paged mode only.  A slot that is still
+         prefilling keeps lens == 0 and a zeroed row in the DEVICE block
+         table, so the batched decode step's write lane for it lands in
+         the reserved null page, never in its half-filled pages.
 
 Prefix caching (ServeConfig.prefix_cache, paged mode only): finished
 requests publish their prompt pages into a radix tree
-(serve/prefix_cache.py) instead of freeing them; admission matches the
-longest cached prefix, attaches those pages to the slot (refcounted), and
-prefills ONLY the uncached suffix - suffix queries attend over the cached
-pages through the block table.  A fully cached prompt recomputes just its
-last token for logits, copy-on-writing the final shared page first.  When
-the free list runs low, unreferenced cached pages are LRU-evicted back to
-the pool, so caching never blocks an admission plain paged serving could
-have made.
+(serve/prefix_cache.py); admission matches the longest cached prefix,
+attaches those pages refcounted, and prefills ONLY the uncached remainder
+- monolithically as a suffix, or as budgeted chunks when chunked (the
+request's prefill cursor simply starts at the cached-prefix boundary).
+
+Requests finish on length (max_new_tokens) or on a stop token
+(submit(..., stop_tokens=...) / ServeConfig.eos_id), freeing or
+publishing their pages the same tick.  Sampling is greedy at
+temperature 0; temperature > 0 draws through a PRNG key seeded from
+ServeConfig.seed and threaded on the engine, so runs are reproducible.
 """
 from __future__ import annotations
 
 import math
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -48,32 +64,25 @@ from ..configs.base import ModelConfig, ServeConfig
 from ..models import Model, build_model
 from .paged_cache import PageAllocator, pages_needed
 from .prefix_cache import RadixPrefixCache
-from .serve_step import (make_paged_prefill_step, make_prefill_step,
-                         make_serve_step, make_suffix_prefill_step,
-                         sample_token)
+from .scheduler import (ChunkTask, Request, RequestState,
+                        TokenBudgetScheduler)
+from .serve_step import (make_chunk_prefill_step, make_paged_prefill_step,
+                         make_prefill_step, make_serve_step, sample_token)
 
 # attention-family prompts are padded to a multiple of this before the
 # batched prefill, bounding jit recompiles to one per bucket
 PREFILL_BUCKET = 16
 
 
-@dataclass
-class Request:
-    uid: int
-    prompt: List[int]
-    max_new_tokens: int
-    out_tokens: List[int] = field(default_factory=list)
-    done: bool = False
-
-
 class ServeEngine:
     def __init__(self, model: Model, params, scfg: ServeConfig):
         self.model = model
         self.params = params
-        self.scfg = scfg
+        self.scfg = scfg.validate()
         cfg = model.cfg
         B = scfg.max_batch
         self.paged = scfg.paged
+        self.chunked = scfg.chunked
         self._attention_family = cfg.family in ("dense", "moe", "vlm")
         self.prefix: Optional[RadixPrefixCache] = None
         if scfg.prefix_cache and not scfg.paged:
@@ -110,8 +119,11 @@ class ServeEngine:
         self.lens = jnp.zeros((B,), jnp.int32)
         self.slots: List[Optional[Request]] = [None] * B
         self.tokens = jnp.zeros((B, 1), jnp.int32)
-        self.queue: List[Request] = []
+        self.sched = TokenBudgetScheduler(scfg)
         self._uid = 0
+        self._key = jax.random.PRNGKey(scfg.seed)
+        self._finished_this_tick: List[Request] = []
+        self._table_dirty = False    # device block table behind the host's
 
         # donate the cache through the jit boundary so a tick updates the
         # KV pool in place instead of transiently doubling it (donation is
@@ -126,17 +138,31 @@ class ServeEngine:
         if self.paged:
             self._prefill_paged = _jit_donating_cache(
                 make_paged_prefill_step(model), 2)
-            self._prefill_suffix = _jit_donating_cache(
-                make_suffix_prefill_step(model), 2)
+            # one jitted step serves the prefix-suffix AND chunked paths:
+            # a suffix is a final chunk (same batch contract, same HLO)
+            self._prefill_chunk = _jit_donating_cache(
+                make_chunk_prefill_step(model), 2)
 
     # ------------------------------------------------------------------
+    @property
+    def queue(self) -> List[Request]:
+        """Requests waiting for admission (owned by the scheduler)."""
+        return self.sched.queue
+
+    @property
+    def tick_log(self):
+        """Per-tick (decode_tokens, prefill_tokens) budget accounting."""
+        return self.sched.tick_log
+
     def submit(self, prompt: List[int],
-               max_new_tokens: Optional[int] = None) -> int:
+               max_new_tokens: Optional[int] = None,
+               stop_tokens: Optional[Sequence[int]] = None) -> int:
         """Enqueue a request.  Everything that can never be served -
         empty prompt, zero generation budget, overflowing max_seq, a page
         reservation larger than the engine can ever grant - fails HERE
         with a clear error instead of deep inside prefill or the
-        allocator."""
+        allocator.  `stop_tokens` (merged with ServeConfig.eos_id) end
+        generation early the tick one is produced."""
         n_new = self.scfg.max_new_tokens if max_new_tokens is None \
             else max_new_tokens
         if not prompt:
@@ -159,8 +185,12 @@ class ServeEngine:
                     f"most {usable} (pool {self.allocator.num_pages}, "
                     f"max_seq {self.scfg.max_seq}, page "
                     f"{self.scfg.page_size})")
+        stops = frozenset(stop_tokens or ())
+        if self.scfg.eos_id is not None:
+            stops = stops | {self.scfg.eos_id}
         self._uid += 1
-        self.queue.append(Request(self._uid, list(prompt), n_new))
+        self.sched.submit(Request(self._uid, list(prompt), n_new,
+                                  stop_tokens=stops))
         return self._uid
 
     def _free_slot(self) -> Optional[int]:
@@ -181,6 +211,16 @@ class ServeEngine:
                 "peak_pages": self.peak_pages,
                 "peak_live_pages": self.peak_live_pages}
 
+    def stats(self) -> Dict[str, float]:
+        """Engine stats API: scheduler latency aggregates (p50/p95 TTFT
+        and time-between-tokens, wall-clock and work-clock), per-tick
+        budget accounting, and the prefill / prefix-cache counters."""
+        out: Dict[str, float] = dict(self.sched.stats())
+        out.update(self.prefix_stats())
+        out["tick_token_budget"] = self.scfg.tick_token_budget
+        out["chunked"] = self.chunked
+        return out
+
     def kv_cache_bytes(self) -> int:
         """Allocated cache bytes, every leaf: KV strips or pages, block
         table, and recurrent state for ssm/hybrid/audio families.  Caches
@@ -190,23 +230,87 @@ class ServeEngine:
                    for leaf in jax.tree_util.tree_leaves(self.cache))
 
     # ------------------------------------------------------------------
-    # admission
+    # sampling / emission / completion (shared by all schedules)
+    # ------------------------------------------------------------------
+    def _sample(self, logits) -> jax.Array:
+        """(B, 1, V) logits -> (B, 1) tokens.  Greedy at temperature 0;
+        otherwise gumbel sampling through the engine's threaded PRNG key
+        (one split per call, so a fixed ServeConfig.seed reproduces the
+        whole trace)."""
+        if self.scfg.temperature <= 0.0:
+            return sample_token(logits)
+        self._key, sub = jax.random.split(self._key)
+        return sample_token(logits, temperature=self.scfg.temperature,
+                            key=sub)
+
+    def _emit(self, req: Request, tok: int) -> bool:
+        """Record one generated token; True when the request is finished
+        (stop token or length budget)."""
+        req.out_tokens.append(tok)
+        self.sched.note_token(req, time.time())
+        if tok in req.stop_tokens:
+            req.finish_reason = "stop"
+            return True
+        if len(req.out_tokens) >= req.max_new_tokens:
+            req.finish_reason = "length"
+            return True
+        return False
+
+    def _finish(self, req: Request):
+        """Free the request's slot; pages go back to the pool (or publish
+        into the prefix cache) the same tick."""
+        i = req.slot
+        req.state = RequestState.DONE
+        req.done = True
+        self.slots[i] = None
+        self.lens = self.lens.at[i].set(0)
+        if self.prefix is not None:
+            # prompt pages go into the radix tree; the partial tail page
+            # and generation pages return to the pool
+            self.prefix.release(i, req.prompt)
+        elif self.paged:
+            self.allocator.free_slot(i)
+        if self.paged:
+            self._table_dirty = True     # zero the slot's device row
+        self.sched.note_finished(req)
+        self._finished_this_tick.append(req)
+
+    def _sync_table(self):
+        """Upload the block table, MASKING rows of slots that are not yet
+        decoding: a PREFILLING slot keeps lens == 0, so the batched decode
+        step's write lane for it must land in the reserved null page - not
+        in the pages its chunks are filling."""
+        tbl = self.allocator.table
+        masked = [i for i, r in enumerate(self.slots)
+                  if r is not None and r.state is not RequestState.DECODING]
+        if masked:
+            tbl = tbl.copy()
+            tbl[masked] = 0
+        self.cache["block_table"] = jnp.asarray(tbl)
+        self._table_dirty = False
+
+    # ------------------------------------------------------------------
+    # admission (monolithic prefill)
     # ------------------------------------------------------------------
     def _admit(self):
-        """Prefill queued requests into free slots.  FIFO; stops at the
-        first request that cannot be placed (no slot, or - paged - not
+        """Prefill queued requests into free slots, whole prompts at once.
+        Admission order follows ServeConfig.admission_policy; stops at the
+        first candidate that cannot be placed (no slot, or - paged - not
         enough free pages: backpressure, it stays queued)."""
-        while self.queue:
+        while True:
+            req = self.sched.peek()
+            if req is None:
+                return
             slot = self._free_slot()
             if slot is None:
                 return
             if self.paged:
-                if not self._admit_paged(slot):
+                if not self._admit_paged(slot, req):
                     return
             elif self._attention_family:
-                self._admit_prefill(slot)
+                self._admit_prefill(slot, req)
             else:
-                self._admit_stepwise(slot)
+                self._admit_stepwise(slot, req)
 
     def _padded_prompt(self, prompt: List[int], bucket: int):
         s_real = len(prompt)
@@ -216,18 +320,23 @@ class ServeEngine:
         return jnp.asarray(toks), s_real
 
     def _place(self, slot: int, req: Request, logits, s_real: int):
-        """Common tail of every admission path: record the slot state and
-        sample the first generated token from the prompt's last logits."""
+        """Common tail of every monolithic admission path: record the slot
+        state and sample the first generated token from the prompt's last
+        logits (a stop token here finishes the request immediately)."""
         self.lens = self.lens.at[slot].set(s_real)
-        nxt = int(sample_token(logits)[0, 0])
-        req.out_tokens.append(nxt)
+        nxt = int(self._sample(logits)[0, 0])
         self.tokens = self.tokens.at[slot, 0].set(nxt)
         self.slots[slot] = req
+        req.slot = slot
+        req.prefill_pos = len(req.prompt)
+        req.state = RequestState.DECODING
+        if self._emit(req, nxt):
+            self._finish(req)
 
-    def _admit_prefill(self, slot: int):
+    def _admit_prefill(self, slot: int, req: Request):
         """Dense cache, attention family: one batched prefill into a
         sub-cache sized to the padded prompt, scattered into the slot row."""
-        req = self.queue.pop(0)
+        self.sched.pop(req)
         toks, s_real = self._padded_prompt(req.prompt, PREFILL_BUCKET)
         s_pad = toks.shape[1]
         sub = self.model.init_cache(1, s_pad)
@@ -238,6 +347,7 @@ class ServeEngine:
         self.cache["v"] = self.cache["v"].at[:, slot, :s_pad].set(
             sub["v"][:, 0])
         self.prefill_tokens += s_real
+        self.sched.note_work(s_real)
         self._place(slot, req, logits, s_real)
 
     def _note_alloc(self):
@@ -264,19 +374,18 @@ class ServeEngine:
             slab = self.cache[key]
             self.cache[key] = slab.at[:, dst].set(slab[:, src])
 
-    def _admit_paged(self, slot: int) -> bool:
+    def _admit_paged(self, slot: int, req: Request) -> bool:
         """Paged cache: reserve the request's worst case up front; prefill
         the prompt straight into its pages.  False = out of pages.
         (Reservations that can never fit were rejected at submit time.)"""
         if self.prefix is not None:
-            return self._admit_prefix(slot)
-        req = self.queue[0]
+            return self._admit_prefix(slot, req)
         scfg = self.scfg
         need = pages_needed(len(req.prompt) + req.max_new_tokens,
                             scfg.page_size)
         if not self.allocator.can_alloc(need):
             return False
-        self.queue.pop(0)
+        self.sched.pop(req)
         pages = self.allocator.alloc(slot, need)
         self._note_alloc()
         toks, s_real = self._padded_prompt(req.prompt, scfg.page_size)
@@ -287,14 +396,16 @@ class ServeEngine:
         logits, self.cache, _ = self._prefill_paged(
             self.params, batch, self.cache, page_ids)
         self.prefill_tokens += s_real
+        self.sched.note_work(s_real)
         self._place(slot, req, logits, s_real)
         return True
 
-    def _admit_prefix(self, slot: int) -> bool:
-        """Prefix-cached admission: attach the longest cached prefix,
-        allocate pages for the rest of the reservation, prefill only the
-        uncached suffix.  False = out of pages even after eviction."""
-        req = self.queue[0]
+    def _reserve_prefix(self, slot: int, req: Request) -> Optional[int]:
+        """Shared prefix-cached reservation: attach the longest cached
+        prefix, allocate the rest of the worst case, COW the final cached
+        page when the whole prompt is covered.  Returns the prompt
+        position computation must start from (the prefill cursor), or
+        None when out of pages even after eviction."""
         scfg = self.scfg
         ps = scfg.page_size
         P = len(req.prompt)
@@ -308,8 +419,7 @@ class ServeEngine:
         need_total = pages_needed(P + req.max_new_tokens, ps)
         n_fresh = need_total - len(shared)
         if not self._ensure_free(n_fresh, protect=matched):
-            return False
-        self.queue.pop(0)
+            return None
         if shared:
             self.allocator.attach(slot, shared)
         owned = self.allocator.alloc(slot, n_fresh)
@@ -317,27 +427,34 @@ class ServeEngine:
             self._copy_page(matched[-1], owned[len(shared)])
             self.cow_copies += 1
         self._note_alloc()
-        suffix_start = P - 1 if full_cover else len(shared) * ps
-        suffix = req.prompt[suffix_start:]
-        s_pad = -(-len(suffix) // ps) * ps
-        toks = np.zeros((1, s_pad), np.int32)
-        toks[0, :len(suffix)] = suffix
+        start = P - 1 if full_cover else len(shared) * ps
+        self.prefix_hit_tokens += start
+        return start
+
+    def _admit_prefix(self, slot: int, req: Request) -> bool:
+        """Prefix-cached monolithic admission: the whole uncached suffix
+        prefills in one pass - literally the request's FINAL chunk, so
+        this delegates to _run_chunk (which samples the first token and
+        flips the request to DECODING).  False = out of pages even after
+        eviction."""
+        start = self._reserve_prefix(slot, req)
+        if start is None:
+            return False
+        self.sched.pop(req)
+        self.slots[slot] = req
+        req.slot = slot
+        req.prefill_pos = start
+        req.state = RequestState.PREFILLING
+        # the decode step later this tick walks the slot's row on device
         self.cache["block_table"] = self.allocator.table_device()
-        page_row = jnp.asarray(self.allocator.table[slot], jnp.int32)
-        batch = {"tokens": jnp.asarray(toks),
-                 "offset": jnp.asarray([suffix_start], jnp.int32),
-                 "true_lens": jnp.asarray([P], jnp.int32)}
-        logits, self.cache, _ = self._prefill_suffix(
-            self.params, batch, self.cache, page_row)
-        self.prefill_tokens += len(suffix)
-        self.prefix_hit_tokens += P - len(suffix)
-        self._place(slot, req, logits, P)
+        self._run_chunk(ChunkTask(req, slot, start,
+                                  len(req.prompt) - start))
         return True
 
-    def _admit_stepwise(self, slot: int):
+    def _admit_stepwise(self, slot: int, req: Request):
         """Token-by-token prefill through decode_step (exact for every
         architecture family, including recurrent state caches)."""
-        req = self.queue.pop(0)
+        self.sched.pop(req)
         lens = self.lens
         cache = self.cache
         last_logits = None
@@ -349,24 +466,136 @@ class ServeEngine:
             last_logits = logits
         self.cache, self.lens = cache, lens
         self.prefill_tokens += len(req.prompt)
-        nxt = int(sample_token(last_logits)[slot, 0]) \
+        self.sched.note_work(len(req.prompt))
+        nxt = int(self._sample(last_logits)[slot, 0]) \
             if last_logits is not None else 0
-        req.out_tokens.append(nxt)
         self.tokens = self.tokens.at[slot, 0].set(nxt)
         self.slots[slot] = req
+        req.slot = slot
+        req.prefill_pos = len(req.prompt)
+        req.state = RequestState.DECODING
+        if self._emit(req, nxt):
+            self._finish(req)
+
+    # ------------------------------------------------------------------
+    # chunked prefill (token-budget schedule)
+    # ------------------------------------------------------------------
+    def _reserve_chunked(self, slot: int, req: Request) -> bool:
+        """Chunked admission: reserve pages (through the prefix cache when
+        enabled) and mark the request PREFILLING with its cursor at the
+        cached-prefix boundary - no prompt computation happens here; the
+        scheduler streams chunks in over the coming ticks."""
+        if self.prefix is not None:
+            start = self._reserve_prefix(slot, req)
+            if start is None:
+                return False
+        else:
+            need = pages_needed(len(req.prompt) + req.max_new_tokens,
+                                self.scfg.page_size)
+            if not self.allocator.can_alloc(need):
+                return False
+            self.allocator.alloc(slot, need)
+            self._note_alloc()
+            start = 0
+        self.slots[slot] = req
+        req.slot = slot
+        req.prefill_pos = start
+        req.state = RequestState.PREFILLING
+        return True
+
+    def _run_chunk(self, task: ChunkTask):
+        """Execute one planned prefill chunk through the offset-causal
+        block-table kernel; the chunk's K/V lands in the slot's pages and
+        its queries attend over everything already written (cached prefix
+        + earlier chunks).  The final chunk samples the request's first
+        token from the prompt's last logits and flips it to DECODING."""
+        req, slot = task.req, task.slot
+        ps = self.scfg.page_size
+        start, n = task.start, task.length
+        s_pad = -(-n // ps) * ps
+        toks = np.zeros((1, s_pad), np.int32)
+        toks[0, :n] = req.prompt[start:start + n]
+        page_row = jnp.asarray(self.allocator.table[slot], jnp.int32)
+        batch = {"tokens": jnp.asarray(toks),
+                 "offset": jnp.asarray([start], jnp.int32),
+                 "true_lens": jnp.asarray([start + n], jnp.int32)}
+        logits, self.cache, _ = self._prefill_chunk(
+            self.params, batch, self.cache, page_row)
+        req.prefill_pos = start + n
+        self.prefill_tokens += n
+        self.sched.note_work(n)
+        self.sched.chunks_run += 1
+        if req.prefill_pos >= len(req.prompt):
+            self.lens = self.lens.at[slot].set(len(req.prompt))
+            nxt = int(self._sample(logits)[0, 0])
+            self.tokens = self.tokens.at[slot, 0].set(nxt)
+            req.state = RequestState.DECODING
+            self._table_dirty = True     # unmask the slot's device row
+            if self._emit(req, nxt):
+                self._finish(req)
+
+    def _tick_chunked(self) -> List[Request]:
+        """One budgeted iteration: admit, fill the budget with prefill
+        chunks, run one batched decode step for the slots that were
+        already decoding.  Total work never exceeds tick_token_budget."""
+        w0 = self.sched.work_clock
+        decode_slots = [i for i, r in enumerate(self.slots)
+                        if r is not None
+                        and r.state is RequestState.DECODING]
+        # admission: reserve slots + pages for as many queued requests as
+        # the policy head allows (no prompt computation yet)
+        while True:
+            req = self.sched.peek()
+            slot = self._free_slot()
+            if req is None or slot is None:
+                break
+            if not self._reserve_chunked(slot, req):
+                break
+            self.sched.pop(req)
+        prefilling = [(i, r) for i, r in enumerate(self.slots)
+                      if r is not None
+                      and r.state is RequestState.PREFILLING]
+        budget = self.scfg.tick_token_budget - len(decode_slots)
+        chunks = self.sched.plan_chunks(prefilling, budget)
+        for task in chunks:
+            self._run_chunk(task)
+        if decode_slots:
+            if self.prefix is not None:
+                self._cow_guard()
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              self.tokens, self.lens)
+            self.sched.note_work(len(decode_slots))
+            next_tokens = self._sample(logits)
+            for i in decode_slots:
+                req = self.slots[i]
+                self.lens = self.lens.at[i].add(1)
+                tok = int(next_tokens[i, 0])
+                self.tokens = self.tokens.at[i, 0].set(tok)
+                if self._emit(req, tok):
+                    self._finish(req)
+        n_decode = len(decode_slots)
+        self.sched.note_tick(n_decode,
+                             self.sched.work_clock - w0 - n_decode)
+        if self._finished_this_tick:
+            self._maybe_evict_watermark()
+        if self._table_dirty:
+            self._sync_table()
+        return self._finished_this_tick
 
     # ------------------------------------------------------------------
     def _cow_guard(self):
-        """Give any slot about to WRITE into a shared page a private copy
-        first.  By construction generation pages are private (the one
-        structural COW happens at admission), so this is a cheap defensive
-        sweep - but it makes 'decode never corrupts a cached page' an
-        invariant of the tick loop rather than of the admission math."""
+        """Give any decoding slot about to WRITE into a shared page a
+        private copy first.  By construction generation pages are private
+        (the one structural COW happens at admission), so this is a cheap
+        defensive sweep - but it makes 'decode never corrupts a cached
+        page' an invariant of the tick loop rather than of the admission
+        math.  Slots still prefilling are skipped: their decode write lane
+        is masked to the null page, not to table[lens // page_size]."""
         ps = self.scfg.page_size
         lens = np.asarray(self.lens)
         dirty = False
         for i, req in enumerate(self.slots):
-            if req is None:
+            if req is None or req.state is not RequestState.DECODING:
                 continue
             idx = int(lens[i]) // ps
             page = int(self.allocator.table[i, idx])
@@ -376,56 +605,78 @@ class ServeEngine:
                 self.cow_copies += 1
                 dirty = True
         if dirty:
-            self.cache["block_table"] = self.allocator.table_device()
+            self._sync_table()
+
+    def _maybe_evict_watermark(self):
+        if self.prefix is not None and self.scfg.prefix_evict_watermark > 0:
+            usable = self.allocator.num_pages - 1
+            target = math.ceil(self.scfg.prefix_evict_watermark * usable)
+            short = target - self.allocator.free_pages
+            if short > 0:
+                self.prefix.evict(short)
 
     def tick(self) -> List[Request]:
-        """One engine iteration: admit + one batched decode step.
-        Returns requests that finished this tick."""
+        """One engine iteration.  Monolithic: admit (full prefills) + one
+        batched decode step.  Chunked: one token-budgeted round of decode
+        + prefill chunks.  Returns requests that finished this tick."""
+        self._finished_this_tick = []
+        if self.chunked:
+            return self._tick_chunked()
+        w0 = self.sched.work_clock
         self._admit()
-        if not any(s is not None for s in self.slots):
-            return []
+        if self._finished_this_tick and self.paged:
+            # a request can finish AT admission (stop token / length 1 on
+            # its first sampled token); its pages just went back to the
+            # pool or into the prefix cache, but the device table still
+            # maps its lane to them - re-upload BEFORE the decode step or
+            # the lane's masked write (lens == 0) corrupts position 0 of a
+            # freed or published page
+            self._sync_table()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            if self.sched.work_clock > w0:      # admissions that finished
+                self.sched.note_tick(0, self.sched.work_clock - w0)
+            return self._finished_this_tick
         if self.prefix is not None:
             self._cow_guard()
         logits, self.cache = self._decode(self.params, self.cache,
                                           self.tokens, self.lens)
-        next_tokens = sample_token(logits)
-        finished = []
-        new_tokens = self.tokens
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
+        self.sched.note_work(len(active))
+        next_tokens = self._sample(logits)
+        for i in active:
+            req = self.slots[i]
             self.lens = self.lens.at[i].add(1)
             tok = int(next_tokens[i, 0])
-            req.out_tokens.append(tok)
-            new_tokens = new_tokens.at[i, 0].set(tok)
-            if len(req.out_tokens) >= req.max_new_tokens:
-                req.done = True
-                finished.append(req)
-                self.slots[i] = None
-                self.lens = self.lens.at[i].set(0)
-                if self.prefix is not None:
-                    # prompt pages go into the radix tree; the partial
-                    # tail page and generation pages return to the pool
-                    self.prefix.release(i, req.prompt)
-                elif self.paged:
-                    # pages go back to the pool the tick the request ends
-                    self.allocator.free_slot(i)
-        if finished and self.paged:
-            if self.prefix is not None \
-                    and self.scfg.prefix_evict_watermark > 0:
-                usable = self.allocator.num_pages - 1
-                target = math.ceil(self.scfg.prefix_evict_watermark * usable)
-                short = target - self.allocator.free_pages
-                if short > 0:
-                    self.prefix.evict(short)
-            self.cache["block_table"] = self.allocator.table_device()
-        self.tokens = new_tokens
-        return finished
+            req_finished = self._emit(req, tok)
+            self.tokens = self.tokens.at[i, 0].set(tok)
+            if req_finished:
+                self._finish(req)
+        self.sched.note_tick(len(active),
+                             self.sched.work_clock - w0 - len(active))
+        if self._finished_this_tick and self.paged:
+            self._maybe_evict_watermark()
+            self._sync_table()
+        return self._finished_this_tick
 
-    def run_until_done(self, max_ticks: int = 10_000) -> List[Request]:
+    def run_until_done(self, max_ticks: int = 10_000,
+                       on_exhaust: str = "raise") -> List[Request]:
+        """Tick until queue and slots drain.  If `max_ticks` runs out with
+        work still pending the engine RAISES (on_exhaust="raise", default)
+        so a hung scheduler cannot masquerade as a completed trace; pass
+        on_exhaust="return" to get the partial results back instead."""
         done: List[Request] = []
         for _ in range(max_ticks):
             done.extend(self.tick())
             if not self.queue and all(s is None for s in self.slots):
-                break
+                return done
+        n_flight = sum(s is not None for s in self.slots)
+        if not self.queue and n_flight == 0:
+            return done
+        msg = (f"run_until_done: {max_ticks} ticks exhausted with "
+               f"{len(self.queue)} queued and {n_flight} in-flight "
+               f"requests still pending ({len(done)} finished)")
+        if on_exhaust == "raise":
+            raise RuntimeError(msg)
+        import warnings
+        warnings.warn(msg)
         return done

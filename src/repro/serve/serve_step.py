@@ -61,6 +61,22 @@ def make_suffix_prefill_step(model: Model):
     return suffix_prefill_step
 
 
+def make_chunk_prefill_step(model: Model):
+    """chunk_prefill_step(params, batch, cache, page_row) ->
+    (chunk_last_logits, cache, cursor).  One MID-PROMPT chunk of a
+    token-budget scheduled prefill (serve/scheduler.py): batch["tokens"]:
+    (1, S_pad) the chunk (zero-padded to a page multiple), its absolute
+    start in batch["offset"], and the cursor AFTER the chunk's last real
+    token in batch["true_lens"] (= offset + real chunk length; equals the
+    full prompt length only for the final chunk, whose logits seed
+    decoding); page_row: (n_max,) the sequence's block-table row."""
+
+    def chunk_prefill_step(params, batch, cache, page_row):
+        return model.prefill_chunk(params, batch, cache, page_row)
+
+    return chunk_prefill_step
+
+
 def sample_token(logits, *, temperature: float = 0.0,
                  key: Optional[jax.Array] = None):
     """logits: (B, 1, V) -> (B, 1) int32."""
