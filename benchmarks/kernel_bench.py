@@ -1,8 +1,12 @@
 """Kernel micro-benchmarks: jit wall time of the portable (ref) paths and
-interpret-mode validation cost of the Pallas kernels, plus the latency-
-balanced block configs the scheduler picks for TPU."""
+interpret-mode validation cost of the Pallas kernels, the latency-
+balanced block configs the scheduler picks for TPU, and the ragged
+batched chunk-prefill kernel (one launch for K chunks vs K single-row
+launches - the dispatch fold behind the serve engine's one-launch
+tick)."""
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import choose_block_config
 from repro.kernels import ops, ref
@@ -49,6 +53,38 @@ def run():
     rw = jax.jit(lambda *a: ops.rwkv6_scan(*a, impl="ref"))
     _, us = timed(lambda: rw(r, kk, vv, w, u).block_until_ready(), reps=3)
     emit("kernel/rwkv6_chunked_ref", us, "chunk=32")
+
+    # ragged batched chunk prefill: K chunks of K different sequences at K
+    # different prompt positions - ONE launch (the serve one-launch tick)
+    # vs K single-row launches (the sequential per-chunk oracle)
+    Kc, Sc, Hqc, Hkvc, Dc, psc = 4, 128, 8, 4, 64, 32
+    n_pages, n_max = 64, 16
+    kp = rn(n_pages, psc, Hkvc, Dc, dtype=jnp.float32)
+    vp = rn(n_pages, psc, Hkvc, Dc, dtype=jnp.float32)
+    qc = rn(Kc, Sc, Hqc, Dc, dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(np.arange(1, n_pages))
+    tables = np.zeros((Kc, n_max), np.int32)
+    offsets = np.array([0, 96, 224, 352], np.int32)
+    pos = 0
+    for row in range(Kc):
+        need = (int(offsets[row]) + Sc + psc - 1) // psc
+        tables[row, :need] = perm[pos:pos + need]
+        pos += need
+    tbl_j = jnp.asarray(tables)
+    off_j = jnp.asarray(offsets)
+    tls_j = off_j + Sc
+    single = jax.jit(lambda q, row, off: ops.paged_prefill_attention(
+        q, kp, vp, row, off, impl="ref"))
+    batched = jax.jit(lambda q: ops.batched_paged_prefill_attention(
+        q, kp, vp, tbl_j, off_j, tls_j, impl="ref"))
+    _, us = timed(lambda: [single(qc[row:row + 1], tbl_j[row],
+                                  off_j[row]).block_until_ready()
+                           for row in range(Kc)], reps=3)
+    emit(f"kernel/chunk_prefill_ref_seq_k{Kc}", us, f"launches={Kc}")
+    _, us_b = timed(lambda: batched(qc).block_until_ready(), reps=3)
+    emit(f"kernel/chunk_prefill_ref_batched_k{Kc}", us_b,
+         f"launches=1;speedup={us / max(us_b, 1e-9):.2f}")
 
     # latency-balanced Pallas block configs (the paper's scheduling method)
     for hd, seq in ((64, 4096), (128, 4096), (128, 32768), (256, 32768)):

@@ -30,10 +30,18 @@ admission-time prefill vs the token-budget scheduler (chunked prefill
 mixed into decode ticks, docs/scheduling.md).  Reported: p50/p95 TTFT and
 time-between-tokens, in wall seconds and in deterministic WORK-CLOCK
 tokens (total prefill + decode tokens executed between two events - the
-exact size of a scheduling bubble).  Asserted: byte-identical greedy
-outputs, a hard per-tick budget ceiling, and lower p95 work-clock TTFT
-and TBT for chunked (decodes no longer stall behind whole-prompt
-prefills).
+exact size of a scheduling bubble), plus dispatch accounting (jitted
+launches and device->host transfers per tick, recompile count, host-loop
+wall time).  Asserted: byte-identical greedy outputs, a hard per-tick
+budget ceiling, and lower p95 work-clock TTFT and TBT for chunked
+(decodes no longer stall behind whole-prompt prefills).
+
+--chunked --batched additionally runs the sequential per-chunk oracle
+(ServeConfig.batched=False) and pins the ONE-LAUNCH TICK: the batched
+engine must serve a steady-state tick - K prefill chunks + M decodes in
+flight - with exactly one batched ragged prefill launch, one fused
+decode launch, and one device->host transfer, with greedy outputs
+bit-identical to the sequential path and strictly fewer total launches.
 
 Output: CSV rows per mode; --json additionally writes the full metrics
 dict (CI uploads it as a workflow artifact).
@@ -124,10 +132,16 @@ def run_latency_mode(model, params, scfg, arrivals, max_new, short_len):
            "tick_token_budget": st["tick_token_budget"],
            "short_ttft_work_p95": float(np.percentile(short_ttft, 95))}
     row.update({k: st[k] for k in (
-        "ticks", "chunks_run", "max_tick_tokens",
+        "ticks", "chunks_run", "packs_run", "max_tick_tokens",
         "ttft_wall_p50", "ttft_wall_p95", "tbt_wall_p50", "tbt_wall_p95",
         "ttft_work_p50", "ttft_work_p95", "tbt_work_p50", "tbt_work_p95",
-        "stall_work_p50", "stall_work_p95", "stall_work_max")})
+        "stall_work_p50", "stall_work_p95", "stall_work_max",
+        # dispatch accounting: jitted launches, device->host transfers,
+        # recompiles, and per-tick host-loop wall time
+        "jit_calls", "host_syncs", "compile_count",
+        "jit_calls_per_tick_max", "jit_calls_per_tick_mean",
+        "jit_calls_per_busy_tick_max", "host_syncs_per_tick_max",
+        "tick_host_wall_p50", "tick_host_wall_p95")})
     return outs, row
 
 
@@ -158,10 +172,16 @@ def run_chunked_trace(args, out_json):
     base = dict(max_batch=max_batch, max_seq=args.max_seq,
                 max_new_tokens=args.max_new, paged=True,
                 page_size=args.page_size, num_pages=num_pages)
+    chunk_kw = dict(chunked=True, prefill_chunk=args.prefill_chunk,
+                    tick_token_budget=budget)
     cfg_mono = ServeConfig(**base)
-    cfg_chunk = ServeConfig(**base, chunked=True,
-                            prefill_chunk=args.prefill_chunk,
-                            tick_token_budget=budget)
+    cfg_chunk = ServeConfig(**base, **chunk_kw)            # batched (default)
+    modes = [("monolithic", cfg_mono)]
+    if args.batched:
+        # the sequential per-chunk oracle the one-launch tick is held to
+        modes.append(("chunked_seq",
+                      ServeConfig(**base, **chunk_kw, batched=False)))
+    modes.append(("chunked", cfg_chunk))
 
     print(f"# arch={cfg.name} max_batch={max_batch} lens={args.lens} "
           f"waves={waves} max_new={args.max_new} "
@@ -169,9 +189,10 @@ def run_chunked_trace(args, out_json):
           f"budget={budget}")
     print("mode,requests,tokens,seconds,tok_per_s,ticks,chunks_run,"
           "max_tick_tokens,stall_work_p95,short_ttft_work_p95,"
-          "tbt_wall_p95,ttft_wall_p95")
+          "tbt_wall_p95,ttft_wall_p95,jit_calls,busy_tick_jit_max,"
+          "sync_max,compiles")
     rows, outs = {}, {}
-    for mode, scfg in (("monolithic", cfg_mono), ("chunked", cfg_chunk)):
+    for mode, scfg in modes:
         outs[mode], r = run_latency_mode(model, params, scfg, arrivals,
                                          args.max_new, short_len)
         rows[mode] = r
@@ -180,9 +201,38 @@ def run_chunked_trace(args, out_json):
               f"{r['max_tick_tokens']},{r['stall_work_p95']:.0f},"
               f"{r['short_ttft_work_p95']:.0f},"
               f"{r['tbt_wall_p95'] * 1e3:.1f}ms,"
-              f"{r['ttft_wall_p95'] * 1e3:.1f}ms")
+              f"{r['ttft_wall_p95'] * 1e3:.1f}ms,"
+              f"{r['jit_calls']},{r['jit_calls_per_busy_tick_max']},"
+              f"{r['host_syncs_per_tick_max']},{r['compile_count']}")
 
     mono, chunk = rows["monolithic"], rows["chunked"]
+    if args.batched:
+        seq = rows["chunked_seq"]
+        print(f"# one-launch ticks: busy-tick jit calls "
+              f"{chunk['jit_calls_per_busy_tick_max']} vs "
+              f"{seq['jit_calls_per_busy_tick_max']} sequential, total "
+              f"launches {chunk['jit_calls']} vs {seq['jit_calls']}, "
+              f"syncs {chunk['host_syncs']} vs {seq['host_syncs']}, "
+              f"compiles {chunk['compile_count']} vs "
+              f"{seq['compile_count']}")
+        assert outs["chunked"] == outs["chunked_seq"], \
+            "batched chunk execution changed greedy outputs"
+        # the acceptance criterion: a steady-state tick with prefill AND
+        # decode in flight is one batched prefill launch + one decode
+        # launch; no tick ever syncs more than once
+        assert chunk["jit_calls_per_busy_tick_max"] == 2, \
+            f"batched busy tick ran {chunk['jit_calls_per_busy_tick_max']}" \
+            f" jitted calls (want exactly 2)"
+        assert chunk["jit_calls_per_tick_max"] <= 2
+        assert chunk["host_syncs_per_tick_max"] <= 1
+        assert chunk["jit_calls"] < seq["jit_calls"], \
+            "batched path must issue fewer launches than sequential"
+        rows["savings_batched"] = {
+            "jit_calls_ratio": chunk["jit_calls"] / max(seq["jit_calls"], 1),
+            "host_syncs_ratio": chunk["host_syncs"]
+            / max(seq["host_syncs"], 1),
+            "identical_greedy_outputs": True,
+        }
     print(f"# p95 tick-work stall {chunk['stall_work_p95']:.0f} vs "
           f"{mono['stall_work_p95']:.0f} tokens, short-prompt p95 TTFT "
           f"{chunk['short_ttft_work_p95']:.0f} vs "
@@ -333,6 +383,12 @@ def main(argv=None):
                     help="mixed trace: monolithic admission prefill vs the "
                          "token-budget chunked-prefill scheduler, with "
                          "p50/p95 TTFT and time-between-tokens")
+    ap.add_argument("--batched", action="store_true",
+                    help="with --chunked: additionally run the sequential "
+                         "per-chunk oracle and assert the one-launch tick "
+                         "(exactly 2 jitted calls + 1 device->host "
+                         "transfer per steady-state tick, identical greedy "
+                         "outputs, fewer total launches)")
     ap.add_argument("--prefill-chunk", type=int, default=512,
                     help="chunked trace: tokens per prefill chunk (page "
                          "multiple)")

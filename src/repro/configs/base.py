@@ -206,6 +206,14 @@ class ServeConfig:
     chunked: bool = False
     tick_token_budget: int = 0  # tokens of work (decode + prefill) per tick
     admission_policy: str = "fifo"   # fifo | sjf (shortest prompt first)
+    # batched=True (default) packs every prefill chunk the scheduler plans
+    # for a tick into ONE ragged batched kernel launch (K rows bucketed to
+    # a power of two to bound recompiles), samples final-chunk tokens
+    # device-side, and folds all per-slot updates into vectorized masked
+    # ops - a steady-state tick costs one prefill launch + one decode
+    # launch + one device->host transfer regardless of traffic.  False
+    # keeps the sequential one-launch-per-chunk path (the parity oracle).
+    batched: bool = True
 
     # --- paged KV cache (serve/paged_cache.py) ------------------------------
     # paged=True stores K/V in a global page pool indexed through a block

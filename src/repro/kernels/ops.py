@@ -211,21 +211,48 @@ def paged_flash_decode(q, k_pages, v_pages, block_table, cache_len, *,
                                   logit_softcap=logit_softcap, scale=scale)
 
 
+def batched_paged_prefill_attention(q, k_pages, v_pages, page_tables,
+                                    q_offsets, true_lens, *,
+                                    window: int = 0,
+                                    logit_softcap: float = 0.0,
+                                    scale: Optional[float] = None,
+                                    impl: Optional[str] = None) -> jax.Array:
+    """Ragged batched mid-prompt chunk-prefill attention over partially
+    filled block tables: K chunks of K different sequences in ONE call.
+
+    q: (K,S,Hq,D) chunk queries; row k sits at absolute positions
+    q_offsets[k] + arange(S) (its K/V already written into its pages),
+    zero-padded past true_lens[k] - q_offsets[k]; page_tables: (K,n_max)
+    per-row block-table rows; true_lens: (K,) per-row prefill cursors
+    (dead padding rows carry 0 and an all-null table row, returning
+    zero).  Each real row attends causally over every earlier position
+    and the chunk itself.  The Pallas path walks every row's table from
+    SMEM inside one grid (K, heads, kv-pages) launch with the (m, l,
+    acc) merge VMEM-resident (kernels/paged_prefill.py); the ref path
+    gathers pages per row and applies the offset causal mask."""
+    impl = impl or default_impl()
+    if impl == "pallas":
+        from . import paged_prefill as pp
+        return pp.batched_paged_prefill_attention(
+            q, k_pages, v_pages, page_tables, q_offsets, true_lens,
+            window=window, logit_softcap=logit_softcap, scale=scale)
+    return ref.batched_paged_prefill_attention(
+        q, k_pages, v_pages, page_tables, q_offsets, true_lens,
+        window=window, logit_softcap=logit_softcap, scale=scale)
+
+
 def paged_prefill_attention(q, k_pages, v_pages, page_row, q_offset, *,
                             window: int = 0, logit_softcap: float = 0.0,
                             scale: Optional[float] = None,
                             impl: Optional[str] = None) -> jax.Array:
     """Mid-prompt chunk-prefill attention over a partially filled block
-    table.
+    table: the K=1 special case of batched_paged_prefill_attention.
 
     q: (1,S,Hq,D) chunk queries at absolute positions q_offset + arange(S)
     (chunk K/V already written into its pages) - the uncached suffix after
     a prefix-cache hit, or any chunk of a token-budget scheduled prefill;
     page_row: (n_max,) the sequence's block-table row.  Each row attends
-    causally over every earlier position and the chunk itself.  The Pallas
-    path walks the row from SMEM with the (m, l, acc) merge VMEM-resident
-    (kernels/paged_prefill.py); the ref path gathers pages and applies the
-    offset causal mask."""
+    causally over every earlier position and the chunk itself."""
     impl = impl or default_impl()
     if impl == "pallas":
         from . import paged_prefill as pp

@@ -1,35 +1,51 @@
-"""Pallas TPU paged chunk prefill: a mid-prompt run of new tokens vs a
-partially filled paged KV pool.
+"""Pallas TPU paged chunk prefill: ragged batches of mid-prompt chunk runs
+against a partially filled paged KV pool.
 
-Two callers share this kernel, both handing it queries at absolute
-positions ``q_offset + i`` whose K/V for positions < q_offset is already
+The primary entry point is BATCHED: one launch executes K chunks of K
+DIFFERENT sequences, each at its own prompt position.  Row k carries three
+scalar-prefetched per-row facts in SMEM:
+
+  offset[k]     absolute position of the row's first query token
+  true_len[k]   the row's prefill cursor AFTER its last real token
+                (offset + real chunk length; pages past it are skipped)
+  tables[k, :]  the sequence's block-table row (position-major page ids)
+
+so the serve engine can fold every prefill chunk the scheduler planned
+this tick - K sequences at K different prompt positions, ragged lengths
+zero-padded to one static chunk shape - into ONE kernel launch instead of
+K.  This is the software analogue of the paper's bubble-free vertical
+dataflow: the win of fine-grained chunking only materializes once the
+per-chunk dispatch overhead is folded away (FlatAttention / Zen-Attention
+make the same argument for tile-based NPU attention).
+
+Three callers share the kernel, all handing it queries at absolute
+positions ``offset + i`` whose K/V for positions < offset is already
 resident in the page pool:
 
+  batched chunked prefill  (serve/engine.py) - every chunk of this tick's
+                   token-budget plan, packed by scheduler.pack_chunks.
   prefix caching   (serve/prefix_cache.py) - the uncached SUFFIX after
-                   the longest cached prefix; q_offset = cached tokens.
-  chunked prefill  (serve/scheduler.py) - chunk i of a token-budget
-                   scheduled prompt; q_offset = tokens written by earlier
-                   chunks (plus any cached prefix).  Composing chunks
-                   left to right reproduces the monolithic prefill
-                   exactly - this is the request-level analogue of the
-                   paper's fine-grained attention chunking: small units
-                   that interleave with neighbors instead of stalling
-                   them.
+                   the longest cached prefix; offset = cached tokens.
+  single chunks    (serve/scheduler.py sequential oracle path) - the K=1
+                   special case, kept under the established
+                   ``paged_prefill_attention`` name.
 
 Either way the queries must attend causally over EVERYTHING before them -
-earlier pages AND the chunk's own K/V, both reached through the
-sequence's block-table row.
+earlier pages AND the chunk's own K/V, both reached through the row's
+block-table row.
 
 Same construction as paged_flash_decode (kernels/flash_decode.py): the
-block-table row is scalar-prefetched into SMEM, the BlockSpec index map
-IS the page-table walk, and the running (m, l, acc) online-softmax state
-stays in VMEM scratch across KV pages.  The only new ingredient is a 2-D
-causal mask - each chunk row r masks columns > q_offset + r - computed
-branch-free from the prefetched offset.
+block tables are scalar-prefetched into SMEM, the BlockSpec index map IS
+the page-table walk, and the running (m, l, acc) online-softmax state
+stays in VMEM scratch across KV pages.  The only extra ingredient over
+the decode kernel is a 2-D causal mask - each chunk row r masks columns
+> offset[k] + r - computed branch-free from the prefetched offset.
 
 The grid walks the FULL block-table row (n_max pages, a static shape);
-pages beyond the causal frontier are skipped with pl.when, so the cost
-scales with the attended prefix, not with max_seq.
+pages at or past the row's true_len are skipped with pl.when, so the cost
+scales with the attended prefix, not with max_seq.  Dead (padding) rows
+carry true_len == 0 and an all-null table: every page is skipped and the
+row's output is exactly zero.
 """
 from __future__ import annotations
 
@@ -52,14 +68,15 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _chunk_kernel(pr_ref, off_ref, q_ref, k_ref, v_ref, o_ref, acc_ref,
-                  m_ref, l_ref, *, page_size: int, window: int,
+def _chunk_kernel(tbl_ref, off_ref, tl_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, page_size: int, window: int,
                   scale: float, softcap: float, gq: int, s_suf: int):
-    """pr_ref: (n_max,) block-table row, off_ref: (1,) chunk start - both
-    scalar-prefetched; k_ref/v_ref hold page j of this sequence (the index
-    map already walked the table)."""
-    j = pl.program_id(1)
-    nk = pl.num_programs(1)
+    """tbl_ref: (K, n_max) block-table rows, off_ref/tl_ref: (K,) per-row
+    chunk start / prefill cursor - all scalar-prefetched; k_ref/v_ref hold
+    page j of row b's sequence (the index map already walked the table)."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
 
     @pl.when(j == 0)
     def _init():
@@ -67,17 +84,19 @@ def _chunk_kernel(pr_ref, off_ref, q_ref, k_ref, v_ref, o_ref, acc_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    off = off_ref[0]
+    off = off_ref[b]
+    tl = tl_ref[b]
     k_first = j * page_size
-    # last chunk row attends through position off + s_suf - 1; pages fully
-    # past that frontier contribute nothing (and may be the null page)
-    run = k_first < off + s_suf
+    # the row's last real query attends through position true_len - 1;
+    # pages fully past that frontier contribute nothing (and may be the
+    # null page).  A dead row (true_len == 0) skips every page.
+    run = k_first < tl
     if window > 0:
         run = run & (k_first + page_size > off - window)
 
     @pl.when(run)
     def _compute():
-        q = q_ref[0].astype(jnp.float32).reshape(s_suf * gq, -1) * scale
+        q = q_ref[0, 0].astype(jnp.float32).reshape(s_suf * gq, -1) * scale
         k = k_ref[0].astype(jnp.float32)[:, 0]               # (ps, D)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
@@ -97,55 +116,68 @@ def _chunk_kernel(pr_ref, off_ref, q_ref, k_ref, v_ref, o_ref, acc_ref,
     def _finalize():
         l = jnp.maximum(l_ref[...], 1e-20)
         o = (acc_ref[...] / l).reshape(s_suf, gq, -1)
-        o_ref[0] = o.astype(o_ref.dtype)
+        o_ref[0, 0] = o.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "scale",
                                              "logit_softcap"))
-def paged_prefill_attention(q, k_pages, v_pages, page_row, q_offset, *,
-                            window: int = 0,
-                            scale: Optional[float] = None,
-                            logit_softcap: float = 0.0) -> jax.Array:
-    """Mid-prompt chunk-prefill attention through the block table.
+def batched_paged_prefill_attention(q, k_pages, v_pages, page_tables,
+                                    q_offsets, true_lens, *,
+                                    window: int = 0,
+                                    scale: Optional[float] = None,
+                                    logit_softcap: float = 0.0) -> jax.Array:
+    """Ragged batched mid-prompt chunk-prefill attention through per-row
+    block tables: K chunks of K different sequences in ONE launch.
 
-    q:           (1, S, Hq, D) chunk queries at absolute positions
-                 q_offset + arange(S); the chunk's K/V must already be
-                 written into its pages (attn_prefill_chunk_paged does
-                 both), as must all K/V for positions < q_offset (cached
-                 prefix pages and/or earlier chunks)
+    q:           (K, S, Hq, D) chunk queries; row k sits at absolute
+                 positions q_offsets[k] + arange(S).  Each row's K/V must
+                 already be written into its pages
+                 (attn_prefill_chunks_paged does both), as must all K/V
+                 for positions < q_offsets[k] (cached prefix pages and/or
+                 earlier chunks - which may be other rows of the SAME
+                 launch: the per-layer scatter lands before this kernel
+                 reads the pool, so packing two chunks of one sequence is
+                 exact as long as their offsets are ordered).
     k/v_pages:   (P, page_size, Hkv, D) global page pool
-    page_row:    (n_max,) int32 - this sequence's block-table row,
+    page_tables: (K, n_max) int32 - per-row block-table rows,
                  position-major; entries past the reservation point at the
                  null page 0 and are never touched by the causal mask
-    q_offset:    scalar int32, absolute position of the first chunk token
-    Returns (1, S, Hq, D).
+    q_offsets:   (K,) int32, absolute position of each row's first token
+    true_lens:   (K,) int32, each row's prefill cursor after its last
+                 REAL token (ragged lengths: rows are zero-padded to S).
+                 A dead padding row carries 0 and an all-null table row;
+                 its output is exactly zero.
+    Returns (K, S, Hq, D); rows beyond true_len - q_offset are garbage
+    (the caller selects real rows' outputs).
     """
-    _, S, Hq, D = q.shape
+    K, S, Hq, D = q.shape
     ps, Hkv = k_pages.shape[1], k_pages.shape[2]
     G = Hq // Hkv
-    n_max = page_row.shape[0]
+    n_max = page_tables.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(D)
-    page_row = jnp.asarray(page_row, jnp.int32)
-    off = jnp.reshape(jnp.asarray(q_offset, jnp.int32), (1,))
+    page_tables = jnp.asarray(page_tables, jnp.int32)
+    off = jnp.asarray(q_offsets, jnp.int32).reshape(K)
+    tl = jnp.asarray(true_lens, jnp.int32).reshape(K)
 
-    # head-major GQA grouping, one grid row per KV head
-    qg = q[0].reshape(S, Hkv, G, D).transpose(1, 0, 2, 3)    # (Hkv,S,G,D)
+    # head-major GQA grouping, one grid row per (sequence row, KV head)
+    qg = q.reshape(K, S, Hkv, G, D).transpose(0, 2, 1, 3, 4)  # (K,Hkv,S,G,D)
     kernel = functools.partial(_chunk_kernel, page_size=ps, window=window,
                                scale=scale, softcap=logit_softcap, gq=G,
                                s_suf=S)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,           # block-table row + offset in SMEM
-        grid=(Hkv, n_max),
+        num_scalar_prefetch=3,       # tables + offsets + true_lens in SMEM
+        grid=(K, Hkv, n_max),
         in_specs=[
-            pl.BlockSpec((1, S, G, D), lambda h, j, pr, off: (h, 0, 0, 0)),
-            # the index map IS the page-table walk: page j of the sequence
+            pl.BlockSpec((1, 1, S, G, D),
+                         lambda b, h, j, tbl, off, tl: (b, h, 0, 0, 0)),
+            # the index map IS the page-table walk: page j of row b
             pl.BlockSpec((1, ps, 1, D),
-                         lambda h, j, pr, off: (pr[j], 0, h, 0)),
+                         lambda b, h, j, tbl, off, tl: (tbl[b, j], 0, h, 0)),
             pl.BlockSpec((1, ps, 1, D),
-                         lambda h, j, pr, off: (pr[j], 0, h, 0)),
+                         lambda b, h, j, tbl, off, tl: (tbl[b, j], 0, h, 0)),
         ],
-        out_specs=pl.BlockSpec((1, S, G, D),
-                               lambda h, j, pr, off: (h, 0, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, S, G, D),
+                               lambda b, h, j, tbl, off, tl: (b, h, 0, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((S * G, D), jnp.float32),
             pltpu.VMEM((S * G, 1), jnp.float32),
@@ -155,9 +187,27 @@ def paged_prefill_attention(q, k_pages, v_pages, page_row, q_offset, *,
     o = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((Hkv, S, G, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((K, Hkv, S, G, D), q.dtype),
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=_interpret(),
-    )(page_row, off, qg, k_pages, v_pages)
-    return o.transpose(1, 0, 2, 3).reshape(1, S, Hq, D)
+    )(page_tables, off, tl, qg, k_pages, v_pages)
+    return o.transpose(0, 2, 1, 3, 4).reshape(K, S, Hq, D)
+
+
+def paged_prefill_attention(q, k_pages, v_pages, page_row, q_offset, *,
+                            window: int = 0,
+                            scale: Optional[float] = None,
+                            logit_softcap: float = 0.0) -> jax.Array:
+    """Single-sequence mid-prompt chunk prefill: the K=1 special case of
+    batched_paged_prefill_attention.
+
+    q: (1, S, Hq, D); page_row: (n_max,) this sequence's block-table row;
+    q_offset: scalar int32.  Every position of the chunk is treated as
+    real (true_len = q_offset + S), matching the historical single-row
+    contract.  Returns (1, S, Hq, D)."""
+    off = jnp.asarray(q_offset, jnp.int32).reshape(1)
+    return batched_paged_prefill_attention(
+        q, k_pages, v_pages, jnp.asarray(page_row, jnp.int32)[None],
+        off, off + q.shape[1], window=window, scale=scale,
+        logit_softcap=logit_softcap)

@@ -219,53 +219,76 @@ def paged_flash_decode(q, k_pages, v_pages, block_table, cache_len, *,
                         logit_softcap=logit_softcap)
 
 
-def paged_prefill_attention(q, k_pages, v_pages, page_row, q_offset, *,
-                            scale: Optional[float] = None,
-                            window: int = 0,
-                            logit_softcap: float = 0.0) -> jax.Array:
-    """Mid-prompt chunk-prefill attention through a block table (reference
-    oracle).
+def batched_paged_prefill_attention(q, k_pages, v_pages, page_tables,
+                                    q_offsets, true_lens, *,
+                                    scale: Optional[float] = None,
+                                    window: int = 0,
+                                    logit_softcap: float = 0.0) -> jax.Array:
+    """Ragged batched mid-prompt chunk-prefill attention through per-row
+    block tables (reference oracle): K chunks of K different sequences,
+    each at its own absolute offset, in one call.
 
-    q: (1, S, Hq, D) chunk queries at absolute positions q_offset +
-    arange(S) - the uncached suffix after a prefix-cache hit, or any chunk
-    of a token-budget scheduled prefill; k/v_pages: (P, page_size, Hkv, D)
-    global pool; page_row: (n_max,) this sequence's block-table row (the
-    chunk's K/V already written into its pages, as is all K/V for
-    positions < q_offset).  Each query row attends causally over positions
-    0..q_offset+row - earlier pages and the chunk itself, so composing
-    chunks left to right matches one monolithic causal prefill exactly.
+    q: (K, S, Hq, D) chunk queries; row k sits at absolute positions
+    q_offsets[k] + arange(S), zero-padded past its real length (ragged
+    rows share one static S); k/v_pages: (P, page_size, Hkv, D) global
+    pool; page_tables: (K, n_max) per-row block-table rows (each row's
+    chunk K/V already written into its pages, as is all K/V for positions
+    < q_offsets[k]); true_lens: (K,) each row's prefill cursor after its
+    last REAL token - columns at or past it are masked, the gather-level
+    analogue of the Pallas kernel's page skip.  A dead padding row
+    (true_len == 0, all-null table) returns exactly zero.  Each real
+    query row attends causally over positions 0..q_offset+row - earlier
+    pages and the chunk itself, so composing chunks left to right matches
+    one monolithic causal prefill exactly.
 
-    Gathers the row's pages into a contiguous strip and applies the offset
-    causal mask - the ground truth the Pallas chunk kernel
+    Gathers each row's pages into a contiguous strip and applies the
+    offset causal mask - the ground truth the Pallas chunk kernel
     (kernels/paged_prefill.py) is validated against, and the portable
     chunked / prefix-cached serving path off-TPU.
     """
-    _, S, Hq, D = q.shape
+    K, S, Hq, D = q.shape
     _, ps, Hkv, _ = k_pages.shape
     G = _gqa_expand(Hq, Hkv)
     sc = scale if scale is not None else 1.0 / math.sqrt(D)
     LOG2E = 1.4426950408889634
-    page_row = jnp.asarray(page_row, jnp.int32)
-    k = k_pages[page_row].reshape(-1, Hkv, D)            # (n_max*ps, Hkv, D)
-    v = v_pages[page_row].reshape(-1, Hkv, D)
-    Skv = k.shape[0]
-    qf = (q[0].astype(jnp.float32) * sc).reshape(S, Hkv, G, D)
-    s = jnp.einsum("shgd,khd->shgk", qf, k.astype(jnp.float32))
+    page_tables = jnp.asarray(page_tables, jnp.int32)
+    k = k_pages[page_tables].reshape(K, -1, Hkv, D)      # (K, n_max*ps, ...)
+    v = v_pages[page_tables].reshape(K, -1, Hkv, D)
+    Skv = k.shape[1]
+    qf = (q.astype(jnp.float32) * sc).reshape(K, S, Hkv, G, D)
+    s = jnp.einsum("bshgd,bkhd->bshgk", qf, k.astype(jnp.float32))
     if logit_softcap > 0.0:
         s = logit_softcap * jnp.tanh(s / logit_softcap)
-    row = jnp.asarray(q_offset, jnp.int32) + jnp.arange(S)
+    row = jnp.asarray(q_offsets, jnp.int32)[:, None] + jnp.arange(S)[None, :]
     col = jnp.arange(Skv)
-    mask = col[None, :] <= row[:, None]
+    tl = jnp.asarray(true_lens, jnp.int32)
+    mask = (col[None, None, :] <= row[:, :, None]) \
+        & (col[None, None, :] < tl[:, None, None])
     if window > 0:
-        mask = mask & (col[None, :] > row[:, None] - window)
-    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        mask = mask & (col[None, None, :] > row[:, :, None] - window)
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
     m = jnp.max(s, -1, keepdims=True)
     m_safe = jnp.where(m <= NEG_INF / 2, 0.0, m)
-    p = jnp.where(mask[:, None, None, :],
+    p = jnp.where(mask[:, :, None, None, :],
                   jnp.exp2((s - m_safe) * LOG2E), 0.0)
     l = jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-20)
-    o = jnp.einsum("shgk,khd->shgd", p / l, v.astype(jnp.float32))
-    return o.reshape(1, S, Hq, D).astype(q.dtype)
+    o = jnp.einsum("bshgk,bkhd->bshgd", p / l, v.astype(jnp.float32))
+    return o.reshape(K, S, Hq, D).astype(q.dtype)
+
+
+def paged_prefill_attention(q, k_pages, v_pages, page_row, q_offset, *,
+                            scale: Optional[float] = None,
+                            window: int = 0,
+                            logit_softcap: float = 0.0) -> jax.Array:
+    """Single-sequence mid-prompt chunk prefill (reference oracle): the
+    K=1 special case of batched_paged_prefill_attention.  q: (1, S, Hq, D);
+    page_row: (n_max,); every chunk position is treated as real
+    (true_len = q_offset + S), the historical single-row contract."""
+    off = jnp.asarray(q_offset, jnp.int32).reshape(1)
+    return batched_paged_prefill_attention(
+        q, k_pages, v_pages, jnp.asarray(page_row, jnp.int32)[None],
+        off, off + q.shape[1], scale=scale, window=window,
+        logit_softcap=logit_softcap)
 
 
 def combine_partial_softmax(m_parts, l_parts, o_parts):

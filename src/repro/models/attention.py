@@ -146,40 +146,70 @@ def attn_decode_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
     return y, k_pages, v_pages
 
 
-def attn_prefill_chunk_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
-                             page_row, offset, *, window: int = 0,
-                             impl: Optional[str] = None):
-    """Prefill one MID-PROMPT chunk of one sequence's prompt into its pages.
+def attn_prefill_chunks_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
+                              page_tables, offsets, true_lens, *,
+                              window: int = 0,
+                              impl: Optional[str] = None):
+    """Prefill a RAGGED BATCH of mid-prompt chunks - K chunks of K
+    different sequences, each at its own prompt position - into their
+    pages, in one pass.
 
-    x: (1, S, D) holds a contiguous run of prompt tokens at absolute
-    positions offset + arange(S) - the uncached suffix after a prefix-cache
-    hit (serve/prefix_cache.py), or any chunk of a token-budget scheduled
-    prefill (serve/scheduler.py).  Pages already holding K/V for positions
-    < offset (cached prefix + earlier chunks) sit at the front of the
-    block-table row; trailing pad K/V is masked by `lens` at decode time.
-    Chunk K/V is scattered token-by-token through the block-table row - a
-    chunk need not start on a page boundary - then the chunk queries
-    attend over every earlier position AND the chunk itself via the
-    offset-causal paged kernel (kernels/paged_prefill.py), so composing
-    chunks left to right is exact.
+    x: (K, S, D); row k holds a contiguous run of prompt tokens at
+    absolute positions offsets[k] + arange(S), zero-padded past its real
+    length (true_lens[k] - offsets[k]).  Pages already holding K/V for
+    positions < offsets[k] (cached prefix + earlier chunks) sit at the
+    front of row k's block-table row page_tables[k].  Each row's chunk
+    K/V is scattered token-by-token through its table row - a chunk need
+    not start on a page boundary - with PAD positions redirected to the
+    null page 0, so two chunks of the SAME sequence packed into one batch
+    never collide (row A's pad tail would otherwise race row B's real
+    writes at the same positions).  Then all rows' queries attend over
+    every earlier position AND their own chunk via the offset-causal
+    batched kernel (kernels/paged_prefill.py), so packing the
+    scheduler's whole per-tick chunk plan into ONE launch is exact.
+    Dead padding rows (true_len == 0, all-null table row) write only to
+    the null page and return garbage rows the caller discards.
     Returns (y, k_pages, v_pages)."""
     q, k, v = _qkv(params, x, cfg)
-    S = x.shape[1]
+    K, S = x.shape[:2]
     page_size = k_pages.shape[1]
-    pos = jnp.asarray(offset, jnp.int32) + jnp.arange(S)
+    n_max = page_tables.shape[1]
+    pos = jnp.asarray(offsets, jnp.int32)[:, None] + jnp.arange(S)[None, :]
     if cfg.use_rope:
         q = rope(q, pos, cfg.rope_theta, cfg.rope_scaling)
         k = rope(k, pos, cfg.rope_theta, cfg.rope_scaling)
-    pages = page_row[pos // page_size]
-    offs = pos % page_size
-    k_pages = k_pages.at[pages, offs].set(k[0].astype(k_pages.dtype))
-    v_pages = v_pages.at[pages, offs].set(v[0].astype(v_pages.dtype))
-    o = ops.paged_prefill_attention(q, k_pages, v_pages, page_row, offset,
-                                    window=window,
-                                    logit_softcap=cfg.attn_logit_softcap,
-                                    impl=impl)
-    y = dense(params["wo"], o.reshape(1, S, cfg.n_heads * cfg.head_dim))
+    valid = pos < jnp.asarray(true_lens, jnp.int32)[:, None]    # (K, S)
+    pidx = jnp.minimum(pos // page_size, n_max - 1)
+    pages = jnp.where(valid, jnp.take_along_axis(page_tables, pidx, axis=1),
+                      0)
+    offs = jnp.where(valid, pos % page_size, 0)
+    k_pages = k_pages.at[pages, offs].set(k.astype(k_pages.dtype))
+    v_pages = v_pages.at[pages, offs].set(v.astype(v_pages.dtype))
+    o = ops.batched_paged_prefill_attention(
+        q, k_pages, v_pages, page_tables, offsets, true_lens, window=window,
+        logit_softcap=cfg.attn_logit_softcap, impl=impl)
+    y = dense(params["wo"], o.reshape(K, S, cfg.n_heads * cfg.head_dim))
     return y, k_pages, v_pages
+
+
+def attn_prefill_chunk_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
+                             page_row, offset, *, window: int = 0,
+                             impl: Optional[str] = None):
+    """Prefill one MID-PROMPT chunk of one sequence's prompt into its
+    pages: the K=1 special case of attn_prefill_chunks_paged.
+
+    x: (1, S, D) holds a contiguous run of prompt tokens at absolute
+    positions offset + arange(S) - the uncached suffix after a
+    prefix-cache hit (serve/prefix_cache.py), or a single budget chunk.
+    Every position of x is treated as real (true_len = offset + S): the
+    historical single-row contract, where trailing pad K/V lands in the
+    sequence's own reserved pages and is masked by `lens` at decode time.
+    Returns (y, k_pages, v_pages)."""
+    off = jnp.asarray(offset, jnp.int32).reshape(1)
+    return attn_prefill_chunks_paged(
+        params, x, cfg, k_pages, v_pages,
+        jnp.asarray(page_row, jnp.int32)[None], off, off + x.shape[1],
+        window=window, impl=impl)
 
 
 # the prefix-cache suffix is the final-chunk special case

@@ -43,6 +43,11 @@ class Model:
     # earlier chunks).  The suffix above is the final-chunk special case.
     # (serve/scheduler.py owns the host-side chunk planning)
     prefill_chunk: Optional[Callable] = None
+    # ragged batched chunk prefill: K chunks of K different sequences, each
+    # with its own block-table row / offset / cursor, in ONE call - the
+    # one-launch serve tick packs a whole tick's chunk plan through this.
+    # prefill_chunk above is its K=1 special case.
+    prefill_chunks: Optional[Callable] = None
 
 
 def build_model(cfg: ModelConfig) -> Model:
@@ -234,47 +239,68 @@ def build_model(cfg: ModelConfig) -> Model:
         logits = unembed(params["tok"], x_last, cfg)
         return logits.astype(jnp.float32), cache, lens
 
-    def prefill_chunk(params, batch, cache, page_row, *, impl=None):
-        """Prefill one MID-PROMPT chunk of one sequence's prompt (B=1).
+    def prefill_chunks(params, batch, cache, page_tables, *, impl=None):
+        """Prefill a RAGGED BATCH of mid-prompt chunks: K chunks of K
+        different sequences, each at its own prompt position, in ONE pass
+        (the serve engine's one-launch tick packs every chunk the
+        scheduler planned into a single call here).
 
-        batch: {"tokens": (1, S_pad) chunk tokens (zero-padded),
-                "offset": (1,) absolute position of the chunk's first token,
-                "true_lens": (1,) cursor AFTER the chunk's last real token
-                (= offset + real chunk length)}; page_row: (n_max,) the
-        sequence's block-table row.  Chunk queries attend causally over
-        everything already resident - cached prefix pages, earlier chunks'
-        K/V, and the chunk itself - through the offset-causal block-table
-        kernel (kernels/paged_prefill.py), so composing chunks left to
-        right reproduces the monolithic prefill exactly.
-        Returns (chunk_last_logits, cache, cursor): the logits of the
-        chunk's LAST real token (meaningful for the final chunk, whose
-        cursor equals the prompt length and whose logits seed decoding).
-
-        The prefix-cache suffix path is the final-chunk special case:
-        cursor == full prompt length (Model.prefill_suffix aliases this)."""
+        batch: {"tokens": (K, S_pad) chunk tokens (each row zero-padded),
+                "offset": (K,) absolute position of each row's first token,
+                "true_lens": (K,) cursor AFTER each row's last real token
+                (= offset + real chunk length)}; page_tables: (K, n_max)
+        per-row block-table rows.  Every row's queries attend causally
+        over everything already resident - cached prefix pages, earlier
+        chunks' K/V (including other rows of the SAME call, when two
+        chunks of one sequence are packed together with ordered offsets),
+        and the row's own chunk - through the offset-causal batched
+        block-table kernel (kernels/paged_prefill.py), so composing
+        chunks left to right reproduces the monolithic prefill exactly.
+        Dead padding rows carry true_lens == 0 and an all-null table row;
+        their logits are garbage the caller drops.
+        Returns (chunk_last_logits (K, 1, V), cache, cursors (K,)): each
+        row's logits are those of its LAST real token (meaningful for
+        final chunks, whose cursor equals the prompt length and whose
+        logits seed decoding)."""
         if fam not in ("dense", "moe", "vlm"):
             raise ValueError(
                 f"chunked prefill needs an attention family, got {fam}")
         tokens = batch["tokens"]
         B, S = tokens.shape
-        off = jnp.asarray(batch["offset"], jnp.int32)[0]
+        offs = jnp.asarray(batch["offset"], jnp.int32)
+        lens = jnp.asarray(batch["true_lens"], jnp.int32)
         x = embed(params["tok"], tokens, cfg)
         if not cfg.use_rope and not cfg.rwkv:
-            # absolute sinusoidal positions start at the chunk offset
+            # absolute sinusoidal positions start at each row's offset
             tbl = sinusoidal_positions(65536, cfg.d_model)
-            x = x + jnp.take(tbl, jnp.minimum(off + jnp.arange(S), 65535),
-                             axis=0)[None].astype(x.dtype)
+            pos = jnp.minimum(offs[:, None] + jnp.arange(S)[None, :], 65535)
+            x = x + jnp.take(tbl, pos, axis=0).astype(x.dtype)
         x = constrain(x, "btd")
-        x, cache = T.stack_prefill_chunk_paged(params["blocks"], x, cfg,
-                                               cache, page_row, off,
-                                               impl=impl)
-        lens = jnp.asarray(batch["true_lens"], jnp.int32)
+        x, cache = T.stack_prefill_chunks_paged(params["blocks"], x, cfg,
+                                                cache, page_tables, offs,
+                                                lens, impl=impl)
         x = apply_norm(params["final_norm"], x, cfg)
-        # the chunk's last REAL token sits at chunk index lens - offset - 1
-        x_last = jnp.take_along_axis(x, (lens - off - 1)[:, None, None],
-                                     axis=1)
+        # each row's last REAL token sits at chunk index lens - offset - 1
+        # (clamped to 0 for dead padding rows, whose logits are dropped)
+        idx = jnp.maximum(lens - offs - 1, 0)
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
         logits = unembed(params["tok"], x_last, cfg)
         return logits.astype(jnp.float32), cache, lens
+
+    def prefill_chunk(params, batch, cache, page_row, *, impl=None):
+        """Prefill one MID-PROMPT chunk of one sequence's prompt: the K=1
+        special case of prefill_chunks.
+
+        batch: {"tokens": (1, S_pad), "offset": (1,), "true_lens": (1,)}
+        - exactly the batched layout with one row; page_row: (n_max,) the
+        sequence's block-table row.  Returns (chunk_last_logits, cache,
+        cursor).
+
+        The prefix-cache suffix path is the final-chunk special case:
+        cursor == full prompt length (Model.prefill_suffix aliases this)."""
+        return prefill_chunks(params, batch, cache,
+                              jnp.asarray(page_row, jnp.int32)[None],
+                              impl=impl)
 
     # prefix-cached suffix prefill IS a chunk prefill whose cursor is the
     # full prompt length - kept under its established name
@@ -372,4 +398,5 @@ def build_model(cfg: ModelConfig) -> Model:
                  decode_step=decode_step,
                  prefill_paged=prefill_paged if is_attn else None,
                  prefill_suffix=prefill_suffix if is_attn else None,
-                 prefill_chunk=prefill_chunk if is_attn else None)
+                 prefill_chunk=prefill_chunk if is_attn else None,
+                 prefill_chunks=prefill_chunks if is_attn else None)

@@ -26,7 +26,7 @@ from ..configs.base import ModelConfig
 from ..sharding import constrain
 from .attention import (attn_decode, attn_decode_paged, attn_forward,
                         attn_init, attn_prefill, attn_prefill_chunk_paged,
-                        attn_prefill_paged)
+                        attn_prefill_chunks_paged, attn_prefill_paged)
 from .layers import apply_norm, grad_cast, mlp, mlp_init, norm_init, pdtype
 from .mamba2 import (mamba2_decode, mamba2_forward, mamba2_init,
                      mamba2_init_state, mamba2_prefill)
@@ -214,16 +214,21 @@ def stack_prefill_paged(params, x, cfg: ModelConfig, cache, page_ids, *,
                "block_table": cache["block_table"]}
 
 
-def stack_prefill_chunk_paged(params, x, cfg: ModelConfig, cache, page_row,
-                              offset, *, impl=None):
-    """Paged prefill of ONE mid-prompt chunk of ONE sequence (B=1): x holds
-    a contiguous run of prompt tokens at absolute positions
-    offset + arange(S) - the uncached suffix after a prefix-cache hit, or
-    any budget-scheduled chunk (serve/scheduler.py).  page_row: (n_max,)
-    the sequence's block-table row - pages already holding K/V (cached
-    prefix + earlier chunks) first, then the pages this chunk and decode
-    will fill.  The block table itself is host-managed
-    (serve/paged_cache.py) and passes through untouched."""
+def stack_prefill_chunks_paged(params, x, cfg: ModelConfig, cache,
+                               page_tables, offsets, true_lens, *,
+                               impl=None):
+    """Paged prefill of a RAGGED BATCH of mid-prompt chunks - K chunks of
+    K different sequences at K different prompt positions, ONE pass
+    through the stack: x: (K, S, D), row k at absolute positions
+    offsets[k] + arange(S) and zero-padded past true_lens[k].
+    page_tables: (K, n_max) per-row block-table rows - pages already
+    holding K/V (cached prefix + earlier chunks) first, then the pages
+    each chunk and decode will fill.  Two chunks of the SAME sequence may
+    share a batch (ordered offsets): each layer scatters every row's K/V
+    before its attention reads the pool, so the later chunk sees the
+    earlier one exactly as if they had run back to back.  The block table
+    itself is host-managed (serve/paged_cache.py) and passes through
+    untouched."""
     flags = _layer_windows(cfg)
 
     def body(x, xs):
@@ -232,15 +237,28 @@ def stack_prefill_chunk_paged(params, x, cfg: ModelConfig, cache, page_row,
         h_in = apply_norm(p["n1"], x, cfg)
         h, kp, vp = _windowed(
             cfg, flag,
-            lambda w: attn_prefill_chunk_paged(p["attn"], h_in, cfg, kp, vp,
-                                               page_row, offset, window=w,
-                                               impl=impl))
+            lambda w: attn_prefill_chunks_paged(p["attn"], h_in, cfg, kp,
+                                                vp, page_tables, offsets,
+                                                true_lens, window=w,
+                                                impl=impl))
         return _ffn_tail(p, x + h, cfg), (kp, vp)
 
     x, (kp, vp) = jax.lax.scan(
         body, x, (params, cache["k_pages"], cache["v_pages"], flags))
     return x, {"k_pages": kp, "v_pages": vp,
                "block_table": cache["block_table"]}
+
+
+def stack_prefill_chunk_paged(params, x, cfg: ModelConfig, cache, page_row,
+                              offset, *, impl=None):
+    """Paged prefill of ONE mid-prompt chunk of ONE sequence: the K=1
+    special case of stack_prefill_chunks_paged (every position of x
+    treated as real - the historical single-row contract).  x: (1, S, D)
+    at absolute positions offset + arange(S); page_row: (n_max,)."""
+    off = jnp.asarray(offset, jnp.int32).reshape(1)
+    return stack_prefill_chunks_paged(
+        params, x, cfg, cache, jnp.asarray(page_row, jnp.int32)[None], off,
+        off + x.shape[1], impl=impl)
 
 
 # the prefix-cache suffix is the final-chunk special case

@@ -2,16 +2,18 @@ from .engine import ServeEngine
 from .paged_cache import (OutOfPages, PageAllocator, dense_kv_bytes,
                           paged_kv_bytes, pages_needed)
 from .prefix_cache import RadixPrefixCache
-from .scheduler import (ChunkTask, Request, RequestState,
-                        TokenBudgetScheduler)
-from .serve_step import (make_chunk_prefill_step, make_paged_prefill_step,
+from .scheduler import (ChunkBatch, ChunkTask, Request, RequestState,
+                        TokenBudgetScheduler, bucket_rows)
+from .serve_step import (make_chunk_batch_step, make_chunk_prefill_step,
+                         make_fused_decode_step, make_paged_prefill_step,
                          make_prefill_step, make_serve_step,
                          make_suffix_prefill_step, sample_token)
 
-__all__ = ["ChunkTask", "OutOfPages", "PageAllocator", "RadixPrefixCache",
-           "Request", "RequestState", "ServeEngine",
-           "TokenBudgetScheduler", "dense_kv_bytes",
-           "make_chunk_prefill_step", "make_paged_prefill_step",
+__all__ = ["ChunkBatch", "ChunkTask", "OutOfPages", "PageAllocator",
+           "RadixPrefixCache", "Request", "RequestState", "ServeEngine",
+           "TokenBudgetScheduler", "bucket_rows", "dense_kv_bytes",
+           "make_chunk_batch_step", "make_chunk_prefill_step",
+           "make_fused_decode_step", "make_paged_prefill_step",
            "make_prefill_step", "make_serve_step",
            "make_suffix_prefill_step", "paged_kv_bytes", "pages_needed",
            "sample_token"]

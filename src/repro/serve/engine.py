@@ -36,6 +36,14 @@ Two prefill schedules (ServeConfig.chunked):
          prefilling keeps lens == 0 and a zeroed row in the DEVICE block
          table, so the batched decode step's write lane for it lands in
          the reserved null page, never in its half-filled pages.
+         With ServeConfig.batched (default) a chunked tick costs ONE
+         ragged batched prefill launch + ONE fused decode launch + ONE
+         device->host transfer regardless of how many requests are in
+         flight: the scheduler packs every planned chunk into a K-row
+         batch (serve/scheduler.py pack_chunks, power-of-two bucketed),
+         final-chunk tokens are sampled device-side, and per-slot
+         bookkeeping collapses into vectorized masked updates.
+         batched=False keeps one launch per chunk (the parity oracle).
 
 Prefix caching (ServeConfig.prefix_cache, paged mode only): finished
 requests publish their prompt pages into a radix tree
@@ -66,7 +74,8 @@ from .paged_cache import PageAllocator, pages_needed
 from .prefix_cache import RadixPrefixCache
 from .scheduler import (ChunkTask, Request, RequestState,
                         TokenBudgetScheduler)
-from .serve_step import (make_chunk_prefill_step, make_paged_prefill_step,
+from .serve_step import (make_chunk_batch_step, make_chunk_prefill_step,
+                         make_fused_decode_step, make_paged_prefill_step,
                          make_prefill_step, make_serve_step, sample_token)
 
 # attention-family prompts are padded to a multiple of this before the
@@ -122,8 +131,19 @@ class ServeEngine:
         self.sched = TokenBudgetScheduler(scfg)
         self._uid = 0
         self._key = jax.random.PRNGKey(scfg.seed)
+        self._dummy_key = jax.random.PRNGKey(0)   # greedy: key arg unused
         self._finished_this_tick: List[Request] = []
         self._table_dirty = False    # device block table behind the host's
+        # host mirror of `lens`: every host-side decision that needs
+        # lengths (COW guard, bookkeeping) reads this instead of syncing
+        # the device array - lengths are fully determined by scheduling
+        self._lens_np = np.zeros((B,), np.int64)
+        # dispatch accounting: jitted model-step launches and device->host
+        # transfers, total and per tick (launch_log rows:
+        # (jit_calls, host_syncs, host_wall_s, n_chunk_tasks, n_decode))
+        self.jit_calls = 0
+        self.host_syncs = 0
+        self.launch_log: List[tuple] = []
 
         # donate the cache through the jit boundary so a tick updates the
         # KV pool in place instead of transiently doubling it (donation is
@@ -134,6 +154,11 @@ class ServeEngine:
             return jax.jit(fn, donate_argnums=(cache_argnum,))
 
         self._decode = _jit_donating_cache(make_serve_step(model), 1)
+        # sampling + masked token/length updates fused into the decode
+        # launch: the whole decode phase of a tick is one jitted call and
+        # the sampled tokens come back in ONE device_get at tick end
+        self._decode_fused = _jit_donating_cache(
+            make_fused_decode_step(model, temperature=scfg.temperature), 1)
         self._prefill = _jit_donating_cache(make_prefill_step(model), 2)
         if self.paged:
             self._prefill_paged = _jit_donating_cache(
@@ -142,6 +167,11 @@ class ServeEngine:
             # a suffix is a final chunk (same batch contract, same HLO)
             self._prefill_chunk = _jit_donating_cache(
                 make_chunk_prefill_step(model), 2)
+            # the one-launch tick: every chunk planned this tick runs as
+            # one ragged batch, final-chunk tokens sampled device-side
+            self._prefill_chunks = _jit_donating_cache(
+                make_chunk_batch_step(model, temperature=scfg.temperature),
+                2)
 
     # ------------------------------------------------------------------
     @property
@@ -214,12 +244,42 @@ class ServeEngine:
     def stats(self) -> Dict[str, float]:
         """Engine stats API: scheduler latency aggregates (p50/p95 TTFT
         and time-between-tokens, wall-clock and work-clock), per-tick
-        budget accounting, and the prefill / prefix-cache counters."""
+        budget accounting, the prefill / prefix-cache counters, and
+        dispatch accounting (jitted launches, device->host transfers, and
+        host-loop wall time per tick)."""
         out: Dict[str, float] = dict(self.sched.stats())
         out.update(self.prefix_stats())
         out["tick_token_budget"] = self.scfg.tick_token_budget
         out["chunked"] = self.chunked
+        out["batched"] = self.scfg.batched
+        out["jit_calls"] = self.jit_calls
+        out["host_syncs"] = self.host_syncs
+        out["compile_count"] = self.compile_cache_size()
+        if self.launch_log:
+            calls = [r[0] for r in self.launch_log]
+            syncs = [r[1] for r in self.launch_log]
+            walls = [r[2] for r in self.launch_log]
+            # "busy" = the steady-state shape of the acceptance criterion:
+            # prefill chunks AND decodes in the same tick
+            busy = [r[0] for r in self.launch_log if r[3] and r[4]]
+            out["jit_calls_per_tick_max"] = max(calls)
+            out["jit_calls_per_tick_mean"] = float(np.mean(calls))
+            out["jit_calls_per_busy_tick_max"] = max(busy) if busy else 0
+            out["host_syncs_per_tick_max"] = max(syncs)
+            out["tick_host_wall_p50"] = float(np.percentile(walls, 50))
+            out["tick_host_wall_p95"] = float(np.percentile(walls, 95))
         return out
+
+    def compile_cache_size(self) -> int:
+        """Total compiled-variant count across the engine's jitted steps
+        (jax pjit cache sizes) - the recompile-count metric benchmarks
+        record and the steady-state guard tests pin down."""
+        fns = [self._decode, self._decode_fused, self._prefill,
+               getattr(self, "_prefill_paged", None),
+               getattr(self, "_prefill_chunk", None),
+               getattr(self, "_prefill_chunks", None)]
+        return sum(fn._cache_size() for fn in fns
+                   if fn is not None and hasattr(fn, "_cache_size"))
 
     def kv_cache_bytes(self) -> int:
         """Allocated cache bytes, every leaf: KV strips or pages, block
@@ -243,11 +303,29 @@ class ServeEngine:
         return sample_token(logits, temperature=self.scfg.temperature,
                             key=sub)
 
-    def _emit(self, req: Request, tok: int) -> bool:
+    def _next_key(self) -> jax.Array:
+        """PRNG key for a fused (device-side sampling) step: a fixed dummy
+        at temperature 0 (the step ignores it - no per-tick split work),
+        one split per launch otherwise."""
+        if self.scfg.temperature <= 0.0:
+            return self._dummy_key
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _fetch_tokens(self) -> np.ndarray:
+        """THE tick's device->host transfer: the (B, 1) token array after
+        the fused steps wrote every lane's sampled token into it."""
+        self.host_syncs += 1
+        return np.asarray(jax.device_get(self.tokens))
+
+    def _emit(self, req: Request, tok: int,
+              work: Optional[int] = None) -> bool:
         """Record one generated token; True when the request is finished
-        (stop token or length budget)."""
+        (stop token or length budget).  `work` back-stamps the token's
+        work clock (one-launch tick: emission is deferred until after the
+        decode launch, but the stamp must match the sequential path)."""
         req.out_tokens.append(tok)
-        self.sched.note_token(req, time.time())
+        self.sched.note_token(req, time.time(), work=work)
         if tok in req.stop_tokens:
             req.finish_reason = "stop"
             return True
@@ -264,6 +342,7 @@ class ServeEngine:
         req.done = True
         self.slots[i] = None
         self.lens = self.lens.at[i].set(0)
+        self._lens_np[i] = 0
         if self.prefix is not None:
             # prompt pages go into the radix tree; the partial tail page
             # and generation pages return to the pool
@@ -324,6 +403,8 @@ class ServeEngine:
         state and sample the first generated token from the prompt's last
         logits (a stop token here finishes the request immediately)."""
         self.lens = self.lens.at[slot].set(s_real)
+        self._lens_np[slot] = s_real
+        self.host_syncs += 1
         nxt = int(self._sample(logits)[0, 0])
         self.tokens = self.tokens.at[slot, 0].set(nxt)
         self.slots[slot] = req
@@ -341,6 +422,7 @@ class ServeEngine:
         s_pad = toks.shape[1]
         sub = self.model.init_cache(1, s_pad)
         batch = {"tokens": toks, "true_lens": jnp.asarray([s_real])}
+        self.jit_calls += 1
         logits, sub, _ = self._prefill(self.params, batch, sub)
         self.cache["k"] = self.cache["k"].at[:, slot, :s_pad].set(
             sub["k"][:, 0])
@@ -393,6 +475,7 @@ class ServeEngine:
                                jnp.int32)
         self.cache["block_table"] = self.allocator.table_device()
         batch = {"tokens": toks, "true_lens": jnp.asarray([s_real])}
+        self.jit_calls += 1
         logits, self.cache, _ = self._prefill_paged(
             self.params, batch, self.cache, page_ids)
         self.prefill_tokens += s_real
@@ -461,12 +544,15 @@ class ServeEngine:
         for t in req.prompt:
             tok = self.tokens.at[slot, 0].set(t)
             pos = lens
+            self.jit_calls += 1
             logits, cache = self._decode(self.params, cache, tok, pos)
             lens = lens.at[slot].add(1)
             last_logits = logits
         self.cache, self.lens = cache, lens
+        self._lens_np[slot] = len(req.prompt)
         self.prefill_tokens += len(req.prompt)
         self.sched.note_work(len(req.prompt))
+        self.host_syncs += 1
         nxt = int(self._sample(last_logits)[slot, 0]) \
             if last_logits is not None else 0
         self.tokens = self.tokens.at[slot, 0].set(nxt)
@@ -508,7 +594,10 @@ class ServeEngine:
         block-table kernel; the chunk's K/V lands in the slot's pages and
         its queries attend over everything already written (cached prefix
         + earlier chunks).  The final chunk samples the request's first
-        token from the prompt's last logits and flips it to DECODING."""
+        token from the prompt's last logits and flips it to DECODING.
+        (The sequential oracle path - ServeConfig.batched=False - and the
+        monolithic prefix-suffix admission; the batched tick replaces the
+        per-chunk launches and per-token syncs with _run_chunk_batch.)"""
         req, slot = task.req, task.slot
         ps = self.scfg.page_size
         start, n = task.start, task.length
@@ -519,6 +608,7 @@ class ServeEngine:
         batch = {"tokens": jnp.asarray(toks),
                  "offset": jnp.asarray([start], jnp.int32),
                  "true_lens": jnp.asarray([start + n], jnp.int32)}
+        self.jit_calls += 1
         logits, self.cache, _ = self._prefill_chunk(
             self.params, batch, self.cache, page_row)
         req.prefill_pos = start + n
@@ -527,6 +617,8 @@ class ServeEngine:
         self.sched.chunks_run += 1
         if req.prefill_pos >= len(req.prompt):
             self.lens = self.lens.at[slot].set(len(req.prompt))
+            self._lens_np[slot] = len(req.prompt)
+            self.host_syncs += 1
             nxt = int(self._sample(logits)[0, 0])
             self.tokens = self.tokens.at[slot, 0].set(nxt)
             req.state = RequestState.DECODING
@@ -534,10 +626,62 @@ class ServeEngine:
             if self._emit(req, nxt):
                 self._finish(req)
 
+    def _run_chunk_batch(self, tasks: List[ChunkTask]):
+        """Execute EVERY prefill chunk planned this tick in ONE jitted
+        launch: the scheduler packs the tasks into a ragged K-row batch
+        (power-of-two bucketed, dead rows padded to the null page like
+        the masked decode table), each row carrying its own offset /
+        cursor / block-table row; final-chunk first tokens are sampled
+        device-side inside the launch and land in the engine's tokens /
+        lens via masked scatters.  Returns the final rows' deferred
+        emissions [(req, slot, work-clock stamp)] - their token VALUES
+        surface in the tick's single device_get after the decode launch.
+
+        Host accounting walks the tasks in plan order so work-clock
+        TTFT/TBT match the sequential per-chunk path bit for bit."""
+        pack = self.sched.pack_chunks(tasks)
+        finals = []
+        for t in tasks:
+            t.req.prefill_pos = t.start + t.length
+            self.prefill_tokens += t.length
+            self.sched.note_work(t.length)
+            self.sched.chunks_run += 1
+            if t.req.prefill_pos >= len(t.req.prompt):
+                t.req.state = RequestState.DECODING
+                self._table_dirty = True     # unmask the slot's device row
+                self._lens_np[t.slot] = len(t.req.prompt)
+                finals.append((t.req, t.slot, self.sched.work_clock))
+        # per-row block-table rows from the host allocator (dead rows keep
+        # the all-null table so every page walk lands on the null page)
+        tables = np.zeros((pack.tokens.shape[0],
+                           self.allocator.table.shape[1]), np.int32)
+        live = pack.row_slots >= 0
+        tables[live] = self.allocator.table[pack.row_slots[live]]
+        batch = {"tokens": jnp.asarray(pack.tokens),
+                 "offset": jnp.asarray(pack.offsets),
+                 "true_lens": jnp.asarray(pack.true_lens),
+                 "final_slot": jnp.asarray(pack.final_slots)}
+        self.jit_calls += 1
+        self.sched.packs_run += 1
+        self.cache, self.tokens, self.lens = self._prefill_chunks(
+            self.params, batch, self.cache, jnp.asarray(tables),
+            self.tokens, self.lens, self._next_key())
+        return finals
+
     def _tick_chunked(self) -> List[Request]:
         """One budgeted iteration: admit, fill the budget with prefill
         chunks, run one batched decode step for the slots that were
-        already decoding.  Total work never exceeds tick_token_budget."""
+        already decoding.  Total work never exceeds tick_token_budget.
+
+        With ServeConfig.batched (default) the tick is ONE batched ragged
+        prefill launch + ONE fused decode launch + ONE device->host
+        transfer, whatever the traffic: all sampling happens device-side
+        and token values surface in a single fetch at the end, so the
+        host loop carries no per-chunk or per-slot round-trips (the
+        serving analogue of the paper's bubble-free vertical dataflow -
+        fine-grained chunking only wins once per-step dispatch overhead
+        is gone).  batched=False keeps one launch per chunk and per-slot
+        emission: the sequential parity oracle."""
         w0 = self.sched.work_clock
         decode_slots = [i for i, r in enumerate(self.slots)
                         if r is not None
@@ -557,21 +701,34 @@ class ServeEngine:
                       and r.state is RequestState.PREFILLING]
         budget = self.scfg.tick_token_budget - len(decode_slots)
         chunks = self.sched.plan_chunks(prefilling, budget)
-        for task in chunks:
-            self._run_chunk(task)
+        self._tick_profile = (len(chunks), len(decode_slots))
+        finals = []
+        if chunks:
+            if self.scfg.batched:
+                finals = self._run_chunk_batch(chunks)
+            else:
+                for task in chunks:
+                    self._run_chunk(task)
         if decode_slots:
             if self.prefix is not None:
                 self._cow_guard()
-            logits, self.cache = self._decode(self.params, self.cache,
-                                              self.tokens, self.lens)
+            live = np.zeros((len(self.slots),), bool)
+            live[decode_slots] = True
+            self.jit_calls += 1
+            self.cache, self.tokens, self.lens = self._decode_fused(
+                self.params, self.cache, self.tokens, self.lens,
+                jnp.asarray(live), self._next_key())
             self.sched.note_work(len(decode_slots))
-            next_tokens = self._sample(logits)
+            self._lens_np[decode_slots] += 1
+        if finals or decode_slots:
+            # THE device->host transfer: every sampled token of the tick
+            toks = self._fetch_tokens()
+            for req, slot, work in finals:
+                if self._emit(req, int(toks[slot, 0]), work=work):
+                    self._finish(req)
             for i in decode_slots:
                 req = self.slots[i]
-                self.lens = self.lens.at[i].add(1)
-                tok = int(next_tokens[i, 0])
-                self.tokens = self.tokens.at[i, 0].set(tok)
-                if self._emit(req, tok):
+                if self._emit(req, int(toks[i, 0])):
                     self._finish(req)
         n_decode = len(decode_slots)
         self.sched.note_tick(n_decode,
@@ -592,7 +749,7 @@ class ServeEngine:
         math.  Slots still prefilling are skipped: their decode write lane
         is masked to the null page, not to table[lens // page_size]."""
         ps = self.scfg.page_size
-        lens = np.asarray(self.lens)
+        lens = self._lens_np          # host mirror: no device->host sync
         dirty = False
         for i, req in enumerate(self.slots):
             if req is None or req.state is not RequestState.DECODING:
@@ -618,10 +775,21 @@ class ServeEngine:
     def tick(self) -> List[Request]:
         """One engine iteration.  Monolithic: admit (full prefills) + one
         batched decode step.  Chunked: one token-budgeted round of decode
-        + prefill chunks.  Returns requests that finished this tick."""
+        + prefill chunks.  Returns requests that finished this tick.
+        Every tick appends a dispatch-accounting row to launch_log:
+        (jit_calls, host_syncs, host_wall_s, n_chunk_tasks, n_decode)."""
         self._finished_this_tick = []
-        if self.chunked:
-            return self._tick_chunked()
+        self._tick_profile = (0, 0)
+        j0, s0 = self.jit_calls, self.host_syncs
+        t0 = time.perf_counter()
+        out = self._tick_chunked() if self.chunked \
+            else self._tick_monolithic()
+        self.launch_log.append(
+            (self.jit_calls - j0, self.host_syncs - s0,
+             time.perf_counter() - t0) + self._tick_profile)
+        return out
+
+    def _tick_monolithic(self) -> List[Request]:
         w0 = self.sched.work_clock
         self._admit()
         if self._finished_this_tick and self.paged:
@@ -637,19 +805,25 @@ class ServeEngine:
             if self.sched.work_clock > w0:      # admissions that finished
                 self.sched.note_tick(0, self.sched.work_clock - w0)
             return self._finished_this_tick
+        self._tick_profile = (0, len(active))
         if self.prefix is not None:
             self._cow_guard()
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          self.tokens, self.lens)
+        # one fused launch: decode + device-side sampling + vectorized
+        # masked token/length updates, then ONE device->host transfer for
+        # every lane's sampled token (was: one int() sync + two .at[i]
+        # dispatches PER SLOT)
+        live = np.zeros((len(self.slots),), bool)
+        live[active] = True
+        self.jit_calls += 1
+        self.cache, self.tokens, self.lens = self._decode_fused(
+            self.params, self.cache, self.tokens, self.lens,
+            jnp.asarray(live), self._next_key())
         self.sched.note_work(len(active))
-        next_tokens = self._sample(logits)
+        self._lens_np[active] += 1
+        toks = self._fetch_tokens()
         for i in active:
             req = self.slots[i]
-            self.lens = self.lens.at[i].add(1)
-            tok = int(next_tokens[i, 0])
-            req_finished = self._emit(req, tok)
-            self.tokens = self.tokens.at[i, 0].set(tok)
-            if req_finished:
+            if self._emit(req, int(toks[i, 0])):
                 self._finish(req)
         self.sched.note_tick(len(active),
                              self.sched.work_clock - w0 - len(active))

@@ -111,6 +111,39 @@ class ChunkTask:
     length: int
 
 
+def bucket_rows(k: int) -> int:
+    """Round a chunk-batch row count up to the next power of two.  The
+    batched chunk step compiles once per (row-bucket, chunk-shape) pair,
+    so bucketing bounds steady-state recompiles to log2(max rows) shapes
+    instead of one per distinct K the planner happens to emit."""
+    b = 1
+    while b < k:
+        b *= 2
+    return b
+
+
+@dataclass(frozen=True)
+class ChunkBatch:
+    """One tick's planned chunks packed into a device-ready ragged batch:
+    row r of every array describes tasks[r]; rows past len(tasks) are DEAD
+    padding up to the power-of-two bucket (zero tokens, offset 0,
+    true_len 0, sentinel slot, and - engine-side - an all-null block-table
+    row), so they compute nothing and update nothing."""
+    tasks: Tuple[ChunkTask, ...]
+    tokens: np.ndarray      # (K_pad, S_pad) int32, each row zero-padded
+    offsets: np.ndarray     # (K_pad,) int32 absolute chunk starts
+    true_lens: np.ndarray   # (K_pad,) int32 cursors AFTER each chunk
+    # slot of each row whose chunk COMPLETES its prompt; non-final and
+    # padding rows carry the out-of-range sentinel max_batch, which the
+    # batched step's mode="drop" scatter discards
+    final_slots: np.ndarray  # (K_pad,) int32
+    row_slots: np.ndarray    # (K_pad,) int32 owning slot, -1 for padding
+
+    @property
+    def k_real(self) -> int:
+        return len(self.tasks)
+
+
 def _percentile(xs: Sequence[float], p: float) -> float:
     return float(np.percentile(np.asarray(list(xs), np.float64), p)) \
         if xs else 0.0
@@ -129,6 +162,7 @@ class TokenBudgetScheduler:
         self.ticks = 0
         self.work_clock = 0          # total prefill + decode tokens executed
         self.chunks_run = 0
+        self.packs_run = 0           # batched chunk launches (1/tick max)
         # per-tick budget accounting: (decode_tokens, prefill_tokens)
         self.tick_log: List[Tuple[int, int]] = []
 
@@ -191,6 +225,38 @@ class TokenBudgetScheduler:
                 progressed = True
         return tasks
 
+    def pack_chunks(self, tasks: Sequence[ChunkTask]) -> ChunkBatch:
+        """Pack one tick's planned chunks into the ragged batch the
+        one-launch tick executes: every task becomes a row of a
+        (K_pad, prefill_chunk) token matrix with its own offset / cursor /
+        owning slot, K_pad bucketed to the next power of two
+        (bucket_rows) so steady-state traffic reuses a handful of
+        compiled shapes.  Multiple chunks of the SAME request may share a
+        batch - plan_chunks emits them in cursor order, and the batched
+        kernel scatters every row's K/V before any row's attention reads
+        the pool, so the later chunk sees the earlier one exactly.
+        Row padding inside a chunk is masked to the null page by the
+        model (pad positions of row A must never race row B's real
+        writes); dead rows carry the max_batch sentinel slot the device
+        scatter drops."""
+        s_pad = self.scfg.prefill_chunk
+        k_pad = bucket_rows(len(tasks))
+        sentinel = self.scfg.max_batch
+        tokens = np.zeros((k_pad, s_pad), np.int32)
+        offsets = np.zeros((k_pad,), np.int32)
+        true_lens = np.zeros((k_pad,), np.int32)
+        final_slots = np.full((k_pad,), sentinel, np.int32)
+        row_slots = np.full((k_pad,), -1, np.int32)
+        for r, t in enumerate(tasks):
+            tokens[r, :t.length] = t.req.prompt[t.start:t.start + t.length]
+            offsets[r] = t.start
+            true_lens[r] = t.start + t.length
+            row_slots[r] = t.slot
+            if t.start + t.length >= len(t.req.prompt):
+                final_slots[r] = t.slot
+        return ChunkBatch(tuple(tasks), tokens, offsets, true_lens,
+                          final_slots, row_slots)
+
     # -- accounting --------------------------------------------------------
     def note_work(self, n_tokens: int):
         self.work_clock += n_tokens
@@ -199,9 +265,16 @@ class TokenBudgetScheduler:
         self.ticks += 1
         self.tick_log.append((decode_tokens, prefill_tokens))
 
-    def note_token(self, req: Request, wall: float):
+    def note_token(self, req: Request, wall: float,
+                   work: Optional[int] = None):
+        """Stamp one emitted token.  `work` overrides the work-clock value
+        recorded for it: the one-launch tick runs every chunk before any
+        token value reaches the host, so it snapshots each final chunk's
+        work clock at planning time and stamps the deferred emission with
+        it - keeping work-clock TTFT/TBT identical to the sequential
+        per-chunk path."""
         req.token_wall.append(wall)
-        req.token_work.append(self.work_clock)
+        req.token_work.append(self.work_clock if work is None else work)
         req.token_tick.append(self.ticks)
 
     def note_finished(self, req: Request):
@@ -237,6 +310,7 @@ class TokenBudgetScheduler:
             "ticks": self.ticks,
             "work_tokens": self.work_clock,
             "chunks_run": self.chunks_run,
+            "packs_run": self.packs_run,
             "max_tick_tokens": max(per_tick) if per_tick else 0,
             "ttft_wall_p50": _percentile(ttft_wall, 50),
             "ttft_wall_p95": _percentile(ttft_wall, 95),

@@ -77,6 +77,59 @@ def make_chunk_prefill_step(model: Model):
     return chunk_prefill_step
 
 
+def make_chunk_batch_step(model: Model, *, temperature: float):
+    """chunk_batch_step(params, batch, cache, page_tables, tokens, lens,
+    key) -> (cache, tokens, lens).  ONE jitted launch for a whole tick's
+    prefill plan: executes every packed chunk row (Model.prefill_chunks),
+    samples the first token of every row that COMPLETED its prompt
+    device-side, and folds the results into the engine's (B, 1) tokens
+    and (B,) lens with single masked scatters - no per-slot host
+    dispatches, no logits ever shipped to the host.
+
+    batch carries the scheduler's pack (serve/scheduler.py ChunkBatch):
+    "tokens" (K, S), "offset" (K,), "true_lens" (K,), and "final_slot"
+    (K,) - the slot of each final row, `max_batch` (out of range, dropped
+    by mode="drop") for non-final and dead padding rows.  `key` feeds
+    temperature > 0 sampling and is ignored at 0."""
+
+    def chunk_batch_step(params, batch, cache, page_tables, tokens, lens,
+                         key):
+        logits, cache, cursors = model.prefill_chunks(params, batch, cache,
+                                                      page_tables)
+        if temperature <= 0.0:
+            toks = sample_token(logits)
+        else:
+            toks = sample_token(logits, temperature=temperature, key=key)
+        slots = batch["final_slot"]
+        tokens = tokens.at[slots, 0].set(toks[:, 0], mode="drop")
+        lens = lens.at[slots].set(cursors, mode="drop")
+        return cache, tokens, lens
+
+    return chunk_batch_step
+
+
+def make_fused_decode_step(model: Model, *, temperature: float):
+    """fused_decode_step(params, cache, tokens, lens, live, key) ->
+    (cache, tokens, lens).  One batched decode step with sampling fused
+    in: lanes where `live` (B,) is True get their sampled token written
+    into tokens and their length bumped by one, dead lanes pass through
+    untouched - the whole per-tick decode becomes one launch and zero
+    per-slot host round-trips.  `key` feeds temperature > 0 sampling and
+    is ignored at 0."""
+
+    def fused_decode_step(params, cache, tokens, lens, live, key):
+        logits, cache = model.decode_step(params, tokens, lens, cache)
+        if temperature <= 0.0:
+            toks = sample_token(logits)
+        else:
+            toks = sample_token(logits, temperature=temperature, key=key)
+        tokens = jnp.where(live[:, None], toks, tokens)
+        lens = lens + live.astype(lens.dtype)
+        return cache, tokens, lens
+
+    return fused_decode_step
+
+
 def sample_token(logits, *, temperature: float = 0.0,
                  key: Optional[jax.Array] = None):
     """logits: (B, 1, V) -> (B, 1) int32."""
