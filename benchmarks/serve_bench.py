@@ -43,6 +43,14 @@ flight - with exactly one batched ragged prefill launch, one fused
 decode launch, and one device->host transfer, with greedy outputs
 bit-identical to the sequential path and strictly fewer total launches.
 
+--preempt-trace exercises decode-priority budget shaping and victim
+preemption (docs/scheduling.md): in-flight decodes' p95 work-clock TBT
+under a long-prompt prefill burst must be strictly lower with
+`decode_priority` on (the prefill share of every tick is capped), and a
+high-priority burst against a capacity cap (ServeConfig.usable_pages)
+must shed, park, and resume low-priority victims with greedy outputs
+bit-identical to the same trace served uncapped.
+
 Output: CSV rows per mode; --json additionally writes the full metrics
 dict (CI uploads it as a workflow artifact).
 """
@@ -363,6 +371,139 @@ def run_prefix_trace(args, out_json):
     return rows
 
 
+# ===========================================================================
+# preemption + decode-priority trace (budget shaping and load shedding)
+# ===========================================================================
+
+def run_preempt_replay(model, params, scfg, arrivals):
+    """Serve a timed-arrival (tick, prompt, max_new, priority) trace."""
+    eng = ServeEngine(model, params, scfg)
+    pending = list(arrivals)
+    tick, done = 0, []
+    t0 = time.time()
+    while pending or eng.queue or any(s is not None for s in eng.slots):
+        while pending and pending[0][0] <= tick:
+            _, prompt, max_new, prio = pending.pop(0)
+            eng.submit(prompt, max_new_tokens=max_new, priority=prio)
+        done.extend(eng.tick())
+        tick += 1
+        assert tick < 500_000, "trace did not drain"
+    dt = time.time() - t0
+    return done, eng, dt
+
+
+def _decode_tbt_p95(done, uids):
+    tbt = [d for r in done if r.uid in uids for d in r.tbt_work()]
+    return float(np.percentile(tbt, 95)) if tbt else 0.0
+
+
+def run_preempt_trace(args, out_json):
+    """Two-part trace for the preemption/shaping acceptance criteria.
+
+    Part 1 - decode-priority budget shaping: short interactive requests
+    decode while a burst of long prompts floods the prefill queue; with
+    `decode_priority` ON the prefill share of every tick is capped, so
+    the in-flight decodes' p95 work-clock TBT must be STRICTLY lower
+    than with shaping off (asserted), at identical request completion.
+
+    Part 2 - preemption: low-priority background requests fill a capacity
+    cap (ServeConfig.usable_pages - same pool shape, fewer grantable
+    pages); a high-priority burst then preempts victims, which park
+    QUEUED->RESUMING and resume through the chunk path.  Greedy outputs
+    must be bit-identical to the same trace served WITHOUT the capacity
+    cap (the uninterrupted oracle), and preemptions/resumes/
+    pages_reclaimed are reported (asserted > 0)."""
+    cfg = get_smoke_config(args.arch).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    short_len, long_len = sorted(args.lens)[0], max(args.lens)
+    n_short, n_long = 3, 4
+    shorts = [(0, rng.integers(1, cfg.vocab_size, size=short_len).tolist(),
+               args.max_new * 2, 0) for _ in range(n_short)]
+    burst = [(4, rng.integers(1, cfg.vocab_size, size=long_len).tolist(),
+              args.max_new, 0) for _ in range(n_long)]
+    arrivals = sorted(shorts + burst)
+    max_batch = n_short + n_long
+    per_req = pages_needed(long_len + 2 * args.max_new, args.page_size)
+    chunk = args.prefill_chunk
+    budget = max_batch + 4 * chunk         # room for several chunks/tick
+    base = dict(max_batch=max_batch, max_seq=args.max_seq,
+                max_new_tokens=args.max_new, paged=True,
+                page_size=args.page_size,
+                num_pages=max_batch * per_req + 1, chunked=True,
+                prefill_chunk=chunk, tick_token_budget=budget)
+    short_uids = set(range(1, n_short + 1))
+
+    print(f"# arch={cfg.name} shorts={n_short}x{short_len} "
+          f"burst={n_long}x{long_len} chunk={chunk} budget={budget} "
+          f"max_prefill_fraction=0.25")
+    print("mode,requests,seconds,decode_tbt_work_p95,max_tick_tokens,"
+          "preemptions,resumes,pages_reclaimed")
+    rows = {}
+    for mode, extra in (("shaping_off", {}),
+                        ("shaping_on", dict(decode_priority=True,
+                                            max_prefill_fraction=0.25))):
+        done, eng, dt = run_preempt_replay(
+            model, params, ServeConfig(**base, **extra), arrivals)
+        st = eng.stats()
+        rows[mode] = {"requests": len(done), "seconds": dt,
+                      "decode_tbt_work_p95": _decode_tbt_p95(done,
+                                                             short_uids),
+                      "max_tick_tokens": st["max_tick_tokens"],
+                      "preemptions": st["preemptions"],
+                      "resumes": st["resumes"],
+                      "pages_reclaimed": st["pages_reclaimed"]}
+        r = rows[mode]
+        print(f"{mode},{r['requests']},{r['seconds']:.2f},"
+              f"{r['decode_tbt_work_p95']:.0f},{r['max_tick_tokens']},"
+              f"{r['preemptions']},{r['resumes']},{r['pages_reclaimed']}")
+
+    off, on = rows["shaping_off"], rows["shaping_on"]
+    print(f"# decode p95 TBT (work-clock): {on['decode_tbt_work_p95']:.0f} "
+          f"shaped vs {off['decode_tbt_work_p95']:.0f} unshaped")
+    assert on["decode_tbt_work_p95"] < off["decode_tbt_work_p95"], \
+        "decode-priority shaping must lower decode p95 work-clock TBT " \
+        "under a prefill burst"
+
+    # ---- part 2: preemption against a capacity cap --------------------
+    lo = [(0, rng.integers(1, cfg.vocab_size, size=long_len).tolist(),
+           args.max_new, 0) for _ in range(2)]
+    hi = [(6, rng.integers(1, cfg.vocab_size, size=short_len * 2).tolist(),
+           args.max_new, 5)]
+    trace = sorted(lo + hi)
+    pre_base = dict(base, max_batch=3, preemption=True,
+                    max_chunks_per_tick=1,
+                    tick_token_budget=3 + chunk)
+    cap = 2 * per_req + 2                  # fits the background, not the burst
+    done_o, eng_o, _ = run_preempt_replay(model, params,
+                                          ServeConfig(**pre_base), trace)
+    done_p, eng_p, _ = run_preempt_replay(
+        model, params, ServeConfig(**pre_base, usable_pages=cap), trace)
+    st = eng_p.stats()
+    outs_o = {r.uid: r.out_tokens for r in done_o}
+    outs_p = {r.uid: r.out_tokens for r in done_p}
+    print(f"# preemption leg: preemptions={st['preemptions']} "
+          f"resumes={st['resumes']} pages_reclaimed={st['pages_reclaimed']} "
+          f"(capacity cap {cap} of {pre_base['num_pages']} pages)")
+    assert st["preemptions"] >= 1 and st["resumes"] >= 1, \
+        "capacity cap never forced a preemption - trace too easy"
+    assert outs_p == outs_o, \
+        "preempt/resume changed greedy outputs vs the uninterrupted run"
+    rows["preemption"] = {"preemptions": st["preemptions"],
+                          "resumes": st["resumes"],
+                          "pages_reclaimed": st["pages_reclaimed"],
+                          "identical_greedy_outputs": True,
+                          "usable_pages": cap,
+                          "tbt_shaping_ratio":
+                          on["decode_tbt_work_p95"]
+                          / max(off["decode_tbt_work_p95"], 1e-9)}
+    if out_json:
+        Path(out_json).write_text(json.dumps(rows, indent=2))
+        print(f"# wrote {out_json}")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b")
@@ -383,6 +524,12 @@ def main(argv=None):
                     help="mixed trace: monolithic admission prefill vs the "
                          "token-budget chunked-prefill scheduler, with "
                          "p50/p95 TTFT and time-between-tokens")
+    ap.add_argument("--preempt-trace", action="store_true",
+                    help="decode-priority shaping (decode p95 TBT with vs "
+                         "without the prefill-share cap under a prefill "
+                         "burst, asserted lower) + preemption under a "
+                         "capacity cap (bit-identical outputs to the "
+                         "uninterrupted run, preempt/resume counters)")
     ap.add_argument("--batched", action="store_true",
                     help="with --chunked: additionally run the sequential "
                          "per-chunk oracle and assert the one-launch tick "
@@ -416,6 +563,8 @@ def main(argv=None):
         return run_prefix_trace(args, args.json)
     if args.chunked:
         return run_chunked_trace(args, args.json)
+    if args.preempt_trace:
+        return run_preempt_trace(args, args.json)
 
     cfg = get_smoke_config(args.arch)
     model = build_model(cfg)

@@ -206,6 +206,12 @@ class ServeConfig:
     chunked: bool = False
     tick_token_budget: int = 0  # tokens of work (decode + prefill) per tick
     admission_policy: str = "fifo"   # fifo | sjf (shortest prompt first)
+    # cap on prefill chunks planned per tick (0 = budget-limited only).
+    # Bounds the ragged chunk-batch width - and, at 1, pins every pack to
+    # the K=1 kernel bucket, which makes replays bit-stable across
+    # different schedules (the deterministic-replay mode the preemption
+    # parity tests and --preempt-trace bench run in).
+    max_chunks_per_tick: int = 0
     # batched=True (default) packs every prefill chunk the scheduler plans
     # for a tick into ONE ragged batched kernel launch (K rows bucketed to
     # a power of two to bound recompiles), samples final-chunk tokens
@@ -215,6 +221,32 @@ class ServeConfig:
     # keeps the sequential one-launch-per-chunk path (the parity oracle).
     batched: bool = True
 
+    # --- decode-priority budget shaping (serve/scheduler.py) ----------------
+    # decode_priority=True caps the prefill share of every tick at
+    # max_prefill_fraction * tick_token_budget AFTER decode slots have taken
+    # their token each, so a burst of queued long prefills can never inflate
+    # the per-tick work (and therefore the work-clock TBT of every in-flight
+    # decode) up to the full budget: steady-state decode TBT is bounded by
+    # n_decode + floor(max_prefill_fraction * budget) instead of budget.
+    # Chunked mode only.
+    decode_priority: bool = False
+    max_prefill_fraction: float = 0.5   # of tick_token_budget, (0, 1]
+
+    # --- preemption (serve/engine.py) ---------------------------------------
+    # preemption=True lets admission SHED lower-priority load when the page
+    # pool runs dry instead of merely backpressuring: a queued request that
+    # outranks a running one (submit(priority=...), higher wins) may preempt
+    # it - the victim's non-shared pages return to the pool (prefix-cache
+    # pages survive via refcounts), the victim parks QUEUED->RESUMING, and
+    # on re-admission the prefix cache re-matches whatever pages survived
+    # while only the lost remainder is re-prefilled through the chunk path.
+    # Victim order: lowest-priority first; PREFILLING (most recently
+    # admitted first) before DECODING (longest-remaining first).  Requires
+    # chunked=True (the resume path is the chunk path).  Equal-priority
+    # requests never preempt each other, so all-default-priority traffic
+    # behaves exactly like preemption=False.
+    preemption: bool = False
+
     # --- paged KV cache (serve/paged_cache.py) ------------------------------
     # paged=True stores K/V in a global page pool indexed through a block
     # table instead of one dense (max_batch, max_seq) strip per slot; only
@@ -223,6 +255,13 @@ class ServeConfig:
     paged: bool = False
     page_size: int = 16         # tokens per page (TPU wants >= 128 in prod)
     num_pages: int = 0          # 0 = dense-equivalent capacity (+ null page)
+    # soft capacity cap: the allocator exposes only this many pages to
+    # admission while the DEVICE pool stays num_pages, so capacity pressure
+    # (backpressure, preemption) can be dialed without changing any array
+    # shape - no recompiles between a pressured run and a full-capacity
+    # oracle, and both execute the very same compiled steps (which is what
+    # keeps their greedy outputs bit-comparable).  0 = the whole pool.
+    usable_pages: int = 0
 
     # --- prefix cache (serve/prefix_cache.py) -------------------------------
     # prefix_cache=True keeps finished requests' prompt pages in a radix
@@ -264,6 +303,38 @@ class ServeConfig:
                     f">= max_batch + prefill_chunk "
                     f"({self.max_batch} + {self.prefill_chunk}) or prefill "
                     f"can starve behind a full decode batch")
+        if self.decode_priority:
+            if not self.chunked:
+                raise ValueError("decode_priority shaping requires "
+                                 "chunked=True (it caps the per-tick "
+                                 "prefill share)")
+            if not 0.0 < self.max_prefill_fraction <= 1.0:
+                raise ValueError(
+                    f"max_prefill_fraction must be in (0, 1], got "
+                    f"{self.max_prefill_fraction}")
+            if int(self.max_prefill_fraction
+                   * self.tick_token_budget) < self.prefill_chunk:
+                raise ValueError(
+                    f"max_prefill_fraction * tick_token_budget "
+                    f"({self.max_prefill_fraction} * "
+                    f"{self.tick_token_budget}) must fit at least one "
+                    f"prefill_chunk ({self.prefill_chunk}) or prefill "
+                    f"starves forever")
+        if self.max_chunks_per_tick < 0:
+            raise ValueError(f"max_chunks_per_tick must be >= 0, got "
+                             f"{self.max_chunks_per_tick}")
+        if self.preemption and not self.chunked:
+            raise ValueError("preemption requires chunked=True (a preempted "
+                             "request resumes through the chunked prefill "
+                             "path)")
+        if self.usable_pages:
+            if not self.paged:
+                raise ValueError("usable_pages requires paged=True")
+            if not 1 <= self.usable_pages <= self.pool_pages() - 1:
+                raise ValueError(
+                    f"usable_pages ({self.usable_pages}) must be in "
+                    f"[1, {self.pool_pages() - 1}] (pool "
+                    f"{self.pool_pages()} incl. the null page)")
         return self
 
     def pages_per_seq(self) -> int:

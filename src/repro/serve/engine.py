@@ -45,6 +45,23 @@ Two prefill schedules (ServeConfig.chunked):
          bookkeeping collapses into vectorized masked updates.
          batched=False keeps one launch per chunk (the parity oracle).
 
+Decode-priority shaping + preemption (chunked mode):
+
+  ServeConfig.decode_priority caps the prefill share of every tick at
+  max_prefill_fraction * tick_token_budget after decode slots take their
+  token each, so a burst of queued prefills can never inflate per-tick
+  work - and with it every in-flight decode's work-clock TBT - up to the
+  full budget.
+  ServeConfig.preemption lets admission SHED lower-priority running
+  requests (submit(priority=...), higher wins) when the page pool or the
+  slot table cannot place a higher-priority candidate: the victim's
+  non-shared pages return to the pool (prefix-cache pages survive via
+  refcounts), it parks QUEUED->RESUMING, and on re-admission the prefix
+  cache re-matches whatever pages survived while only the lost remainder
+  re-prefills through the chunk path.  A mid-decode victim resumes from
+  prompt + generated-so-far (Request.target), so greedy outputs are
+  bit-identical to an uninterrupted run.  Equal priorities never preempt.
+
 Prefix caching (ServeConfig.prefix_cache, paged mode only): finished
 requests publish their prompt pages into a radix tree
 (serve/prefix_cache.py); admission matches the longest cached prefix,
@@ -62,7 +79,7 @@ from __future__ import annotations
 
 import math
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -81,6 +98,67 @@ from .serve_step import (make_chunk_batch_step, make_chunk_prefill_step,
 # attention-family prompts are padded to a multiple of this before the
 # batched prefill, bounding jit recompiles to one per bucket
 PREFILL_BUCKET = 16
+
+# Jitted serve steps are SHARED across every engine built on the same model
+# (and sampling temperature): the steps close over nothing but the model and
+# the temperature, so two engines can execute the very same compiled
+# executables.  That eliminates per-engine recompiles (constructing an
+# engine is free once the first one warmed up) and - just as important -
+# keeps greedy outputs bit-identical ACROSS engine instances: near-tie
+# argmaxes are sensitive to last-ulp rounding differences between separate
+# compilations of the same program, so parity comparisons between two
+# engines (monolithic vs chunked, preempted vs uninterrupted oracle) are
+# only exact when both run the same executables.
+#
+# The cache lives for the PROCESS: the step closures capture the model, so
+# an entry pins its model (and compiled variants) for as long as the
+# process runs.  That is the point - deliberate, bounded by the number of
+# distinct models built, and cheap next to the recompiles it saves.  (A
+# weak-keyed mapping would be a lie here: value -> model -> key is a
+# strong cycle, so nothing would ever actually be evicted.)
+_STEP_CACHE: Dict[int, Any] = {}
+
+
+def _shared_steps(model: Model, temperature: float) -> Dict[str, Any]:
+    # keyed by object identity WITH the model pinned in the entry, so an
+    # id can never be recycled for a different model
+    entry = _STEP_CACHE.get(id(model))
+    if entry is None or entry[0] is not model:
+        entry = (model, {})
+        _STEP_CACHE[id(model)] = entry
+    per_model = entry[1]
+    steps = per_model.get(float(temperature))
+    if steps is None:
+        # donate the cache through the jit boundary so a tick updates the
+        # KV pool in place instead of transiently doubling it (donation is
+        # unimplemented on CPU - skip there to avoid per-call warnings)
+        def _jit_donating_cache(fn, cache_argnum):
+            if jax.default_backend() == "cpu":
+                return jax.jit(fn)
+            return jax.jit(fn, donate_argnums=(cache_argnum,))
+
+        steps = {
+            "decode": _jit_donating_cache(make_serve_step(model), 1),
+            # sampling + masked token/length updates fused into the decode
+            # launch: the whole decode phase of a tick is one jitted call
+            # and the sampled tokens come back in ONE device_get at tick end
+            "decode_fused": _jit_donating_cache(
+                make_fused_decode_step(model, temperature=temperature), 1),
+            "prefill": _jit_donating_cache(make_prefill_step(model), 2),
+        }
+        if model.prefill_paged is not None:
+            steps["prefill_paged"] = _jit_donating_cache(
+                make_paged_prefill_step(model), 2)
+            # one jitted step serves the prefix-suffix AND chunked paths:
+            # a suffix is a final chunk (same batch contract, same HLO)
+            steps["prefill_chunk"] = _jit_donating_cache(
+                make_chunk_prefill_step(model), 2)
+            # the one-launch tick: every chunk planned this tick runs as
+            # one ragged batch, final-chunk tokens sampled device-side
+            steps["prefill_chunks"] = _jit_donating_cache(
+                make_chunk_batch_step(model, temperature=temperature), 2)
+        per_model[float(temperature)] = steps
+    return steps
 
 
 class ServeEngine:
@@ -108,7 +186,8 @@ class ServeEngine:
                     f"page_size ({scfg.page_size})")
             num_pages = scfg.pool_pages()
             self.allocator = PageAllocator(num_pages, scfg.page_size, B,
-                                           scfg.max_seq)
+                                           scfg.max_seq,
+                                           usable_pages=scfg.usable_pages)
             self.cache = model.init_cache(B, scfg.max_seq,
                                           page_size=scfg.page_size,
                                           num_pages=num_pages)
@@ -130,6 +209,7 @@ class ServeEngine:
         self.tokens = jnp.zeros((B, 1), jnp.int32)
         self.sched = TokenBudgetScheduler(scfg)
         self._uid = 0
+        self._admit_seq = 0          # monotone admission stamp (victim order)
         self._key = jax.random.PRNGKey(scfg.seed)
         self._dummy_key = jax.random.PRNGKey(0)   # greedy: key arg unused
         self._finished_this_tick: List[Request] = []
@@ -145,33 +225,18 @@ class ServeEngine:
         self.host_syncs = 0
         self.launch_log: List[tuple] = []
 
-        # donate the cache through the jit boundary so a tick updates the
-        # KV pool in place instead of transiently doubling it (donation is
-        # unimplemented on CPU - skip there to avoid per-call warnings)
-        def _jit_donating_cache(fn, cache_argnum):
-            if jax.default_backend() == "cpu":
-                return jax.jit(fn)
-            return jax.jit(fn, donate_argnums=(cache_argnum,))
-
-        self._decode = _jit_donating_cache(make_serve_step(model), 1)
-        # sampling + masked token/length updates fused into the decode
-        # launch: the whole decode phase of a tick is one jitted call and
-        # the sampled tokens come back in ONE device_get at tick end
-        self._decode_fused = _jit_donating_cache(
-            make_fused_decode_step(model, temperature=scfg.temperature), 1)
-        self._prefill = _jit_donating_cache(make_prefill_step(model), 2)
+        # jitted steps come from the model-level shared cache: every engine
+        # on this model (at this temperature) runs the SAME executables -
+        # no per-engine recompiles, and bit-identical numerics across
+        # engine instances (see _shared_steps)
+        steps = _shared_steps(model, scfg.temperature)
+        self._decode = steps["decode"]
+        self._decode_fused = steps["decode_fused"]
+        self._prefill = steps["prefill"]
         if self.paged:
-            self._prefill_paged = _jit_donating_cache(
-                make_paged_prefill_step(model), 2)
-            # one jitted step serves the prefix-suffix AND chunked paths:
-            # a suffix is a final chunk (same batch contract, same HLO)
-            self._prefill_chunk = _jit_donating_cache(
-                make_chunk_prefill_step(model), 2)
-            # the one-launch tick: every chunk planned this tick runs as
-            # one ragged batch, final-chunk tokens sampled device-side
-            self._prefill_chunks = _jit_donating_cache(
-                make_chunk_batch_step(model, temperature=scfg.temperature),
-                2)
+            self._prefill_paged = steps["prefill_paged"]
+            self._prefill_chunk = steps["prefill_chunk"]
+            self._prefill_chunks = steps["prefill_chunks"]
 
     # ------------------------------------------------------------------
     @property
@@ -186,13 +251,16 @@ class ServeEngine:
 
     def submit(self, prompt: List[int],
                max_new_tokens: Optional[int] = None,
-               stop_tokens: Optional[Sequence[int]] = None) -> int:
+               stop_tokens: Optional[Sequence[int]] = None,
+               priority: int = 0) -> int:
         """Enqueue a request.  Everything that can never be served -
         empty prompt, zero generation budget, overflowing max_seq, a page
         reservation larger than the engine can ever grant - fails HERE
         with a clear error instead of deep inside prefill or the
         allocator.  `stop_tokens` (merged with ServeConfig.eos_id) end
-        generation early the tick one is produced."""
+        generation early the tick one is produced.  Higher `priority`
+        admits first and - with ServeConfig.preemption - may preempt
+        running lower-priority requests when the page pool runs dry."""
         n_new = self.scfg.max_new_tokens if max_new_tokens is None \
             else max_new_tokens
         if not prompt:
@@ -206,7 +274,7 @@ class ServeEngine:
         if self.paged:
             need = pages_needed(len(prompt) + n_new, self.scfg.page_size)
             usable = min(self.allocator.max_pages_per_seq,
-                         self.allocator.num_pages - 1)
+                         self.allocator.usable_pages)
             if need > usable:
                 # backpressure cannot help a reservation larger than the
                 # whole pool - fail fast instead of queueing forever
@@ -220,7 +288,8 @@ class ServeEngine:
             stops = stops | {self.scfg.eos_id}
         self._uid += 1
         self.sched.submit(Request(self._uid, list(prompt), n_new,
-                                  stop_tokens=stops))
+                                  stop_tokens=stops,
+                                  priority=int(priority)))
         return self._uid
 
     def _free_slot(self) -> Optional[int]:
@@ -270,10 +339,44 @@ class ServeEngine:
             out["tick_host_wall_p95"] = float(np.percentile(walls, 95))
         return out
 
+    def check_invariants(self):
+        """Debug hook for serve-path test fixtures (tests/traffic.py calls
+        it after every tick): allocator refcount conservation + block-table
+        mirroring (PageAllocator.check_invariants), prefix-tree consistency
+        when caching is on, and the engine's own host-side bookkeeping -
+        slot back-references, queue states, and the lens mirror.  Pure
+        host-side: never touches a device array, so calling it cannot
+        perturb the launch/sync accounting under test."""
+        if self.paged:
+            if self.prefix is not None:
+                self.prefix.check_invariants()
+            else:
+                self.allocator.check_invariants()
+        for i, r in enumerate(self.slots):
+            if r is None:
+                if self.paged:
+                    assert not self.allocator.table[i].any(), \
+                        f"slot {i} empty but its table row is live"
+                assert self._lens_np[i] == 0, \
+                    f"slot {i} empty but lens mirror {self._lens_np[i]}"
+            else:
+                assert r.slot == i, f"slot {i} back-reference broken"
+                assert r.state in (RequestState.PREFILLING,
+                                   RequestState.DECODING), \
+                    f"slot {i} holds a {r.state} request"
+        for r in self.queue:
+            assert r.state in (RequestState.QUEUED, RequestState.RESUMING)
+            assert r.slot is None, \
+                f"queued request {r.uid} still holds slot {r.slot}"
+            assert r.remaining_new >= 1
+
     def compile_cache_size(self) -> int:
         """Total compiled-variant count across the engine's jitted steps
         (jax pjit cache sizes) - the recompile-count metric benchmarks
-        record and the steady-state guard tests pin down."""
+        record and the steady-state guard tests pin down.  Steps are
+        shared across engines of the same model (_shared_steps), so the
+        absolute count spans every sibling engine in the process; deltas
+        within one engine's run still measure that run's recompiles."""
         fns = [self._decode, self._decode_fused, self._prefill,
                getattr(self, "_prefill_paged", None),
                getattr(self, "_prefill_chunk", None),
@@ -358,12 +461,15 @@ class ServeEngine:
         """Upload the block table, MASKING rows of slots that are not yet
         decoding: a PREFILLING slot keeps lens == 0, so the batched decode
         step's write lane for it must land in the reserved null page - not
-        in the pages its chunks are filling."""
-        tbl = self.allocator.table
+        in the pages its chunks are filling.  The host table is ALWAYS
+        copied before upload: jnp.asarray of an aligned numpy array can be
+        zero-copy on CPU, and the allocator mutates this table in place on
+        every alloc/free/preempt - an aliased upload would let those host
+        writes retarget the device table under an in-flight tick."""
+        tbl = self.allocator.table.copy()
         masked = [i for i, r in enumerate(self.slots)
                   if r is not None and r.state is not RequestState.DECODING]
         if masked:
-            tbl = tbl.copy()
             tbl[masked] = 0
         self.cache["block_table"] = jnp.asarray(tbl)
         self._table_dirty = False
@@ -411,6 +517,7 @@ class ServeEngine:
         req.slot = slot
         req.prefill_pos = len(req.prompt)
         req.state = RequestState.DECODING
+        self._stamp_admit(req)
         if self._emit(req, nxt):
             self._finish(req)
 
@@ -488,18 +595,22 @@ class ServeEngine:
         prefix, allocate the rest of the worst case, COW the final cached
         page when the whole prompt is covered.  Returns the prompt
         position computation must start from (the prefill cursor), or
-        None when out of pages even after eviction."""
+        None when out of pages even after eviction.  A RESUMING request's
+        target is prompt + pre-preemption output: the match re-finds
+        whatever pages survived the preemption (the tree's references kept
+        them alive) and only the lost remainder re-prefills."""
         scfg = self.scfg
         ps = scfg.page_size
-        P = len(req.prompt)
-        matched = self.prefix.match(req.prompt)
+        target = req.target
+        P = len(target)
+        matched = self.prefix.match(target)
         # a fully cached prompt still recomputes its LAST token (we need
         # its logits to start decoding); that token's K/V write lands in
         # the final cached page, which therefore gets a private
         # copy-on-write copy instead of being attached
         full_cover = bool(matched) and len(matched) * ps >= P
         shared = matched[:-1] if full_cover else matched
-        need_total = pages_needed(P + req.max_new_tokens, ps)
+        need_total = pages_needed(P + req.remaining_new, ps)
         n_fresh = need_total - len(shared)
         if not self._ensure_free(n_fresh, protect=matched):
             return None
@@ -513,6 +624,13 @@ class ServeEngine:
         start = P - 1 if full_cover else len(shared) * ps
         self.prefix_hit_tokens += start
         return start
+
+    def _stamp_admit(self, req: Request):
+        """Monotone admission stamp: the preemption policy sheds the most
+        recently admitted PREFILLING victim first (it has the least sunk
+        prefill work and the longest road ahead)."""
+        req.admit_seq = self._admit_seq
+        self._admit_seq += 1
 
     def _admit_prefix(self, slot: int, req: Request) -> bool:
         """Prefix-cached monolithic admission: the whole uncached suffix
@@ -528,6 +646,7 @@ class ServeEngine:
         req.slot = slot
         req.prefill_pos = start
         req.state = RequestState.PREFILLING
+        self._stamp_admit(req)
         # the decode step later this tick walks the slot's row on device
         self.cache["block_table"] = self.allocator.table_device()
         self._run_chunk(ChunkTask(req, slot, start,
@@ -576,7 +695,7 @@ class ServeEngine:
             if start is None:
                 return False
         else:
-            need = pages_needed(len(req.prompt) + req.max_new_tokens,
+            need = pages_needed(len(req.target) + req.remaining_new,
                                 self.scfg.page_size)
             if not self.allocator.can_alloc(need):
                 return False
@@ -587,6 +706,7 @@ class ServeEngine:
         req.slot = slot
         req.prefill_pos = start
         req.state = RequestState.PREFILLING
+        self._stamp_admit(req)
         return True
 
     def _run_chunk(self, task: ChunkTask):
@@ -603,8 +723,10 @@ class ServeEngine:
         start, n = task.start, task.length
         s_pad = -(-n // ps) * ps
         toks = np.zeros((1, s_pad), np.int32)
-        toks[0, :n] = req.prompt[start:start + n]
-        page_row = jnp.asarray(self.allocator.table[slot], jnp.int32)
+        toks[0, :n] = req.target[start:start + n]
+        # copy: the row is a view into the live allocator table (see
+        # _sync_table for the zero-copy aliasing hazard)
+        page_row = jnp.asarray(self.allocator.table[slot].copy(), jnp.int32)
         batch = {"tokens": jnp.asarray(toks),
                  "offset": jnp.asarray([start], jnp.int32),
                  "true_lens": jnp.asarray([start + n], jnp.int32)}
@@ -615,9 +737,9 @@ class ServeEngine:
         self.prefill_tokens += n
         self.sched.note_work(n)
         self.sched.chunks_run += 1
-        if req.prefill_pos >= len(req.prompt):
-            self.lens = self.lens.at[slot].set(len(req.prompt))
-            self._lens_np[slot] = len(req.prompt)
+        if req.prefill_pos >= len(req.target):
+            self.lens = self.lens.at[slot].set(len(req.target))
+            self._lens_np[slot] = len(req.target)
             self.host_syncs += 1
             nxt = int(self._sample(logits)[0, 0])
             self.tokens = self.tokens.at[slot, 0].set(nxt)
@@ -646,10 +768,10 @@ class ServeEngine:
             self.prefill_tokens += t.length
             self.sched.note_work(t.length)
             self.sched.chunks_run += 1
-            if t.req.prefill_pos >= len(t.req.prompt):
+            if t.req.prefill_pos >= len(t.req.target):
                 t.req.state = RequestState.DECODING
                 self._table_dirty = True     # unmask the slot's device row
-                self._lens_np[t.slot] = len(t.req.prompt)
+                self._lens_np[t.slot] = len(t.req.target)
                 finals.append((t.req, t.slot, self.sched.work_clock))
         # per-row block-table rows from the host allocator (dead rows keep
         # the all-null table so every page walk lands on the null page)
@@ -668,6 +790,89 @@ class ServeEngine:
             self.tokens, self.lens, self._next_key())
         return finals
 
+    # ------------------------------------------------------------------
+    # preemption (ServeConfig.preemption): shed low-priority load when the
+    # page pool - or the slot table - cannot place a higher-priority
+    # admission candidate
+    # ------------------------------------------------------------------
+    def _next_victim(self, cand: Request) -> Optional[Request]:
+        """Victim policy: only requests CAND strictly outranks are
+        eligible (equal priority never preempts - the priority-inversion
+        guard, and what keeps all-default-priority traffic preemption
+        free).  PREFILLING victims go first - lowest priority, most
+        recently admitted first (least sunk prefill work) - then DECODING
+        victims, lowest priority, longest remaining generation first
+        (shedding the one that would hold its pages longest)."""
+        best, best_key = None, None
+        for r in self.slots:
+            if r is None or r.priority >= cand.priority:
+                continue
+            if r.state is RequestState.PREFILLING:
+                key = (0, r.priority, -r.admit_seq)
+            elif r.state is RequestState.DECODING:
+                key = (1, r.priority, -r.remaining_new, -r.admit_seq)
+            else:
+                continue
+            if best_key is None or key < best_key:
+                best, best_key = r, key
+        return best
+
+    def _preempt(self, victim: Request):
+        """Shed one running request: drop the slot's reference on every
+        page it holds - private pages return to the pool, prefix-cache
+        pages survive through the tree's refcount - zero its lane, and
+        park it back in the queue as RESUMING.  A mid-decode victim
+        snapshots prompt + generated-so-far as its resume target
+        (Request.target): the chunk path rebuilds that KV on resume and
+        the final resume chunk's logits sample the NEXT token exactly as
+        the uninterrupted decode would have."""
+        slot = victim.slot
+        free0 = self.allocator.free_pages
+        self.allocator.free_slot(slot)
+        self.sched.pages_reclaimed += self.allocator.free_pages - free0
+        self.sched.preemptions += 1
+        victim.n_preemptions += 1
+        self.slots[slot] = None
+        self.lens = self.lens.at[slot].set(0)
+        self._lens_np[slot] = 0
+        victim.slot = None
+        victim.prefill_pos = 0
+        if victim.out_tokens:
+            victim.resume_tokens = victim.prompt + list(victim.out_tokens)
+        victim.state = RequestState.RESUMING
+        self.sched.requeue(victim)
+        self._table_dirty = True     # lane must mask to the null page
+
+    def _try_preempt(self, cand: Request) -> bool:
+        """Shed ONE victim toward placing CAND (the admission loop retries
+        the reservation after each).  False when preemption is off, no
+        eligible victim exists, or shedding every eligible victim plus
+        evicting the whole prefix cache could still not cover CAND's
+        worst-case reservation - then backpressure is the right answer
+        and shedding would only waste the victims' work."""
+        if not self.scfg.preemption:
+            return False
+        victim = self._next_victim(cand)
+        if victim is None:
+            return False
+        need = pages_needed(len(cand.target) + cand.remaining_new,
+                            self.scfg.page_size)
+        headroom = self.allocator.free_pages
+        if self.prefix is not None:
+            headroom += self.prefix.evictable_pages()
+        # DISTINCT pages across eligible victims: a page shared by two
+        # victim slots (or with the prefix tree) frees - or becomes
+        # evictable - only once, so counting per slot would overstate the
+        # reclaim and shed victims for nothing
+        victim_pages = {p for r in self.slots
+                        if r is not None and r.priority < cand.priority
+                        for p in self.allocator.slot_pages(r.slot)}
+        headroom += len(victim_pages)
+        if need > headroom:
+            return False
+        self._preempt(victim)
+        return True
+
     def _tick_chunked(self) -> List[Request]:
         """One budgeted iteration: admit, fill the budget with prefill
         chunks, run one batched decode step for the slots that were
@@ -683,23 +888,43 @@ class ServeEngine:
         is gone).  batched=False keeps one launch per chunk and per-slot
         emission: the sequential parity oracle."""
         w0 = self.sched.work_clock
+        # admission FIRST (it can preempt: a decoding victim shed here
+        # must not join this tick's decode batch): reserve slots + pages
+        # for as many queued requests as the policy head allows (no
+        # prompt computation yet).  When the head cannot be placed and
+        # outranks a running request, shed victims one at a time and
+        # retry; otherwise head-of-line backpressure as before.
+        while True:
+            req = self.sched.peek()
+            if req is None:
+                break
+            resuming = req.state is RequestState.RESUMING
+            placed = False
+            while True:
+                slot = self._free_slot()
+                if slot is not None and self._reserve_chunked(slot, req):
+                    placed = True
+                    break
+                if not self._try_preempt(req):
+                    break
+            if not placed:
+                break
+            self.sched.pop(req)
+            if resuming:
+                self.sched.resumes += 1
+                req.n_resumes += 1
+        if self._table_dirty:
+            # a preemption zeroed a lane (or freed pages that admission
+            # just re-allocated): the device table must mask it to the
+            # null page BEFORE this tick's launches touch the pool
+            self._sync_table()
         decode_slots = [i for i, r in enumerate(self.slots)
                         if r is not None
                         and r.state is RequestState.DECODING]
-        # admission: reserve slots + pages for as many queued requests as
-        # the policy head allows (no prompt computation yet)
-        while True:
-            req = self.sched.peek()
-            slot = self._free_slot()
-            if req is None or slot is None:
-                break
-            if not self._reserve_chunked(slot, req):
-                break
-            self.sched.pop(req)
         prefilling = [(i, r) for i, r in enumerate(self.slots)
                       if r is not None
                       and r.state is RequestState.PREFILLING]
-        budget = self.scfg.tick_token_budget - len(decode_slots)
+        budget = self.sched.prefill_budget(len(decode_slots))
         chunks = self.sched.plan_chunks(prefilling, budget)
         self._tick_profile = (len(chunks), len(decode_slots))
         finals = []
@@ -766,7 +991,7 @@ class ServeEngine:
 
     def _maybe_evict_watermark(self):
         if self.prefix is not None and self.scfg.prefix_evict_watermark > 0:
-            usable = self.allocator.num_pages - 1
+            usable = self.allocator.usable_pages
             target = math.ceil(self.scfg.prefix_evict_watermark * usable)
             short = target - self.allocator.free_pages
             if short > 0:

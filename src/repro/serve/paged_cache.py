@@ -71,16 +71,24 @@ class PageAllocator:
     """
 
     def __init__(self, num_pages: int, page_size: int, max_batch: int,
-                 max_seq: int):
+                 max_seq: int, usable_pages: int = 0):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         if num_pages < 2:
             raise ValueError("need at least 2 pages (page 0 is the null page)")
         self.num_pages = num_pages
         self.page_size = page_size
+        # soft capacity cap (ServeConfig.usable_pages): only pages
+        # 1..usable_pages are ever handed out; the device pool keeps its
+        # full num_pages shape, so capacity pressure can be dialed without
+        # recompiling anything
+        self.usable_pages = usable_pages or (num_pages - 1)
+        if not 1 <= self.usable_pages <= num_pages - 1:
+            raise ValueError(f"usable_pages ({usable_pages}) must be in "
+                             f"[1, {num_pages - 1}]")
         self.max_pages_per_seq = pages_needed(max_seq, page_size)
         # LIFO free list; page 0 stays reserved forever
-        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._free: List[int] = list(range(self.usable_pages, 0, -1))
         self._refs = np.zeros(num_pages, np.int32)
         self._slot_pages: List[List[int]] = [[] for _ in range(max_batch)]
         self.table = np.zeros((max_batch, self.max_pages_per_seq), np.int32)
@@ -92,7 +100,7 @@ class PageAllocator:
 
     @property
     def used_pages(self) -> int:
-        return (self.num_pages - 1) - len(self._free)
+        return self.usable_pages - len(self._free)
 
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
@@ -183,14 +191,22 @@ class PageAllocator:
 
     def table_device(self) -> jnp.ndarray:
         """The block table as a device array (upload is max_batch * n_max
-        int32s - trivial next to one decode step)."""
-        return jnp.asarray(self.table)
+        int32s - trivial next to one decode step).  The host mirror is
+        COPIED first: on CPU backends jnp.asarray of a suitably-aligned
+        numpy array can be zero-copy, and this table is mutated in place
+        by every alloc/free/preempt - an aliased upload would let those
+        host writes silently retarget in-flight device reads (a real,
+        alignment-lottery race, not a hypothetical)."""
+        return jnp.asarray(self.table.copy())
 
     # -- invariants --------------------------------------------------------
     def check_invariants(self, tree_pages=()):
         """Allocator accounting must balance: refcounts equal the number of
         holders (slot memberships + prefix-cache membership), no page is
-        both free and referenced, and the null page is never handed out."""
+        both free and referenced, the null page is never handed out, and
+        every block-table row mirrors its slot's page list exactly (no
+        page both free and mapped through a stale row).  The serve-path
+        test fixtures call this after every tick (tests/traffic.py)."""
         tree = set(tree_pages)
         free = set(self._free)
         assert len(free) == len(self._free), "duplicate page in free list"
@@ -206,5 +222,22 @@ class PageAllocator:
             r = int(self._refs[p])
             assert r == counts.get(p, 0), \
                 f"page {p}: refcount {r} != holders {counts.get(p, 0)}"
-            assert (p in free) == (r == 0), \
-                f"page {p} both free and referenced (refs {r})"
+            if p <= self.usable_pages:
+                assert (p in free) == (r == 0), \
+                    f"page {p} both free and referenced (refs {r})"
+            else:
+                assert r == 0 and p not in free, \
+                    f"page {p} beyond the usable cap is in circulation"
+        for slot, pages in enumerate(self._slot_pages):
+            row = self.table[slot]
+            assert row[:len(pages)].tolist() == pages, \
+                f"slot {slot}: table row diverged from page list"
+            assert not row[len(pages):].any(), \
+                f"slot {slot}: stale table entries past its page list"
+        referenced = sum(1 for p in range(1, self.num_pages)
+                         if self._refs[p] > 0)
+        assert len(free) + referenced == self.usable_pages, \
+            f"page conservation violated: {len(free)} free + {referenced} " \
+            f"referenced != {self.usable_pages} usable"
+        assert all(p <= self.usable_pages for p in free), \
+            "page beyond the usable cap on the free list"

@@ -83,11 +83,17 @@ class RadixPrefixCache:
         """Pages whose only reference is the tree's (LRU candidates)."""
         return sum(1 for p in self._pages if self.alloc.refcount(p) == 1)
 
-    # -- match ----------------------------------------------------------------
-    def match(self, tokens: Sequence[int]) -> List[int]:
-        """Page ids holding the longest cached prefix of `tokens`, whole
-        pages only.  Bumps LRU timestamps along the path.  The caller must
-        `attach` (or protect) the pages before anything else can evict."""
+    def cached_prefix_len(self, tokens: Sequence[int]) -> int:
+        """Tokens of `tokens` currently resident in cached pages (whole
+        pages only) - what a preempted request would NOT have to re-prefill
+        if it resumed right now.  Walks the tree without bumping LRU
+        stamps, so measuring survival cannot perturb eviction order."""
+        return len(self._walk(tokens, touch=False)) * self.page_size
+
+    def _walk(self, tokens: Sequence[int], touch: bool) -> List[int]:
+        """Longest-cached-prefix walk shared by match / cached_prefix_len:
+        page ids covering the longest cached prefix of `tokens`, whole
+        pages only; bumps LRU timestamps along the path iff `touch`."""
         blocks = self._block_split(tokens)
         out: List[int] = []
         node = self.root
@@ -100,11 +106,19 @@ class RadixPrefixCache:
             while m < lim and child.blocks[m] == blocks[i + m]:
                 m += 1
             out.extend(child.pages[:m])
-            self._touch(child)
+            if touch:
+                self._touch(child)
             if m < len(child.blocks):
                 break                       # diverged (or prompt ended) mid-edge
             node, i = child, i + m
         return out
+
+    # -- match ----------------------------------------------------------------
+    def match(self, tokens: Sequence[int]) -> List[int]:
+        """Page ids holding the longest cached prefix of `tokens`, whole
+        pages only.  Bumps LRU timestamps along the path.  The caller must
+        `attach` (or protect) the pages before anything else can evict."""
+        return self._walk(tokens, touch=True)
 
     # -- publish ----------------------------------------------------------------
     def publish(self, tokens: Sequence[int], pages: Sequence[int]) -> List[int]:

@@ -60,6 +60,7 @@ class RequestState(str, Enum):
     QUEUED = "queued"            # submitted, waiting for a slot / pages
     PREFILLING = "prefilling"    # slot + pages held, prompt streaming in
     DECODING = "decoding"        # prompt complete, generating tokens
+    RESUMING = "resuming"        # preempted: re-queued, pages shed, waiting
     DONE = "done"                # finished (length / stop token)
 
 
@@ -69,6 +70,7 @@ class Request:
     prompt: List[int]
     max_new_tokens: int
     stop_tokens: FrozenSet[int] = frozenset()
+    priority: int = 0            # higher admits (and preempts) first
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
     state: RequestState = RequestState.QUEUED
@@ -77,7 +79,20 @@ class Request:
     # chunks prefilled so far); the request's prefill cursor
     prefill_pos: int = 0
     finish_reason: str = ""      # "length" | "stop"
+    # --- preemption ------------------------------------------------------
+    # monotone admission stamp (engine-issued): the preemption policy sheds
+    # the most recently admitted PREFILLING victim first
+    admit_seq: int = -1
+    n_preemptions: int = 0
+    n_resumes: int = 0
+    # a DECODING victim's KV holds prompt + generated tokens; the resume
+    # prefill must rebuild ALL of it before the next decode step, so this
+    # snapshot replaces `prompt` as the chunk path's target (None until the
+    # request is preempted mid-decode)
+    resume_tokens: Optional[List[int]] = None
     # --- latency accounting (wall seconds + engine work-clock tokens) ----
+    # stamps are carried across preempt/resume, never reset: TTFT/TBT stay
+    # monotone and a resume delay shows up as a (real) latency gap
     t_submit: float = 0.0
     w_submit: int = 0
     token_wall: List[float] = field(default_factory=list)
@@ -85,8 +100,24 @@ class Request:
     token_tick: List[int] = field(default_factory=list)
 
     @property
+    def target(self) -> List[int]:
+        """The token sequence the chunk-prefill path must make resident:
+        the prompt, or - resuming after a mid-decode preemption - the
+        prompt plus every token generated before the preemption (the final
+        resume chunk's logits then sample the NEXT token, exactly as the
+        uninterrupted decode would have)."""
+        return self.prompt if self.resume_tokens is None \
+            else self.resume_tokens
+
+    @property
+    def remaining_new(self) -> int:
+        """Generation budget still unspent (resume reservations size pages
+        to target + remaining_new = prompt + max_new, same as admission)."""
+        return self.max_new_tokens - len(self.out_tokens)
+
+    @property
     def prompt_remaining(self) -> int:
-        return len(self.prompt) - self.prefill_pos
+        return len(self.target) - self.prefill_pos
 
     def ttft_wall(self) -> Optional[float]:
         return self.token_wall[0] - self.t_submit if self.token_wall else None
@@ -163,6 +194,10 @@ class TokenBudgetScheduler:
         self.work_clock = 0          # total prefill + decode tokens executed
         self.chunks_run = 0
         self.packs_run = 0           # batched chunk launches (1/tick max)
+        # preemption accounting (incremented by the engine)
+        self.preemptions = 0         # victims shed
+        self.resumes = 0             # preempted requests re-admitted
+        self.pages_reclaimed = 0     # pages returned to the pool by shedding
         # per-tick budget accounting: (decode_tokens, prefill_tokens)
         self.tick_log: List[Tuple[int, int]] = []
 
@@ -172,17 +207,49 @@ class TokenBudgetScheduler:
         req.w_submit = self.work_clock
         self.queue.append(req)
 
+    def requeue(self, req: Request):
+        """Park a preempted victim back in the queue (RESUMING).  Its
+        submit stamps are NOT reset - TTFT/TBT stay monotone across the
+        preempt/resume - and its uid keeps its original FIFO position, so
+        within its priority class a victim resumes ahead of newcomers."""
+        self.queue.append(req)
+
     def peek(self) -> Optional[Request]:
-        """Next admission candidate under the configured policy.  SJF picks
-        the shortest prompt (stable on arrival order); FIFO the oldest."""
+        """Next admission candidate: highest priority first, then the
+        configured policy within the class - SJF picks the shortest
+        remaining prefill (stable on arrival order); FIFO the oldest."""
         if not self.queue:
             return None
         if self.scfg.admission_policy == "sjf":
-            return min(self.queue, key=lambda r: len(r.prompt))
-        return self.queue[0]
+            return min(self.queue,
+                       key=lambda r: (-r.priority, len(r.target), r.uid))
+        return min(self.queue, key=lambda r: (-r.priority, r.uid))
 
     def pop(self, req: Request):
         self.queue.remove(req)
+
+    def queue_depth_by_priority(self) -> Dict[str, int]:
+        """Current queue-depth gauge per priority class (RESUMING victims
+        included - they are queued load like any other)."""
+        out: Dict[str, int] = {}
+        for r in self.queue:
+            key = str(r.priority)
+            out[key] = out.get(key, 0) + 1
+        return out
+
+    # -- budget shaping ----------------------------------------------------
+    def prefill_budget(self, n_decode: int) -> int:
+        """Tokens of prefill work this tick may carry.  Decode slots have
+        already taken one token each off the top (decode is never
+        descheduled); with decode_priority the remainder is additionally
+        capped at max_prefill_fraction * tick_token_budget, so the work of
+        a tick - and with it the work-clock TBT of every in-flight decode
+        - stays bounded however deep the prefill queue is."""
+        budget = self.scfg.tick_token_budget - n_decode
+        if self.scfg.decode_priority:
+            budget = min(budget, int(self.scfg.max_prefill_fraction
+                                     * self.scfg.tick_token_budget))
+        return max(budget, 0)
 
     # -- chunk planning ----------------------------------------------------
     def plan_chunks(self, prefilling: Sequence[Tuple[int, Request]],
@@ -198,22 +265,32 @@ class TokenBudgetScheduler:
         chunk is `prefill_chunk` tokens except a prompt's final
         remainder; a chunk only runs if it fits the remaining budget
         whole, so the budget is never exceeded and every chunk start
-        stays page-aligned."""
+        stays page-aligned.  Higher-priority requests outrank the SRF
+        order (priority-aware chunk fill); a resuming request's target is
+        its prompt plus pre-preemption output (Request.target)."""
         if not prefilling:
             return []
         chunk = self.scfg.prefill_chunk
         srf = sorted(prefilling,
-                     key=lambda sr: (sr[1].prompt_remaining, sr[1].uid))
-        oldest = min(prefilling, key=lambda sr: sr[1].uid)
+                     key=lambda sr: (-sr[1].priority,
+                                     sr[1].prompt_remaining, sr[1].uid))
+        # the guaranteed-progress floor goes to the oldest request OF THE
+        # HIGHEST PRESENT PRIORITY CLASS: within a class no stream of
+        # newcomers can starve a long prompt, while a high-priority
+        # admission (e.g. one that just preempted its way in) is never
+        # stuck behind a lower-priority neighbor's prefill
+        oldest = min(prefilling,
+                     key=lambda sr: (-sr[1].priority, sr[1].uid))
         order = [oldest] + [sr for sr in srf if sr is not oldest]
         planned: Dict[int, int] = {r.uid: r.prefill_pos for _, r in order}
+        cap = self.scfg.max_chunks_per_tick or len(order) * 1_000_000
         tasks: List[ChunkTask] = []
         progressed = True
-        while budget > 0 and progressed:
+        while budget > 0 and progressed and len(tasks) < cap:
             progressed = False
             for slot, req in order:
                 cursor = planned[req.uid]
-                remaining = len(req.prompt) - cursor
+                remaining = len(req.target) - cursor
                 if remaining <= 0:
                     continue
                 take = min(chunk, remaining)
@@ -223,6 +300,8 @@ class TokenBudgetScheduler:
                 planned[req.uid] = cursor + take
                 budget -= take
                 progressed = True
+                if len(tasks) >= cap:
+                    break
         return tasks
 
     def pack_chunks(self, tasks: Sequence[ChunkTask]) -> ChunkBatch:
@@ -248,11 +327,11 @@ class TokenBudgetScheduler:
         final_slots = np.full((k_pad,), sentinel, np.int32)
         row_slots = np.full((k_pad,), -1, np.int32)
         for r, t in enumerate(tasks):
-            tokens[r, :t.length] = t.req.prompt[t.start:t.start + t.length]
+            tokens[r, :t.length] = t.req.target[t.start:t.start + t.length]
             offsets[r] = t.start
             true_lens[r] = t.start + t.length
             row_slots[r] = t.slot
-            if t.start + t.length >= len(t.req.prompt):
+            if t.start + t.length >= len(t.req.target):
                 final_slots[r] = t.slot
         return ChunkBatch(tuple(tasks), tokens, offsets, true_lens,
                           final_slots, row_slots)
@@ -311,6 +390,11 @@ class TokenBudgetScheduler:
             "work_tokens": self.work_clock,
             "chunks_run": self.chunks_run,
             "packs_run": self.packs_run,
+            "preemptions": self.preemptions,
+            "resumes": self.resumes,
+            "pages_reclaimed": self.pages_reclaimed,
+            "queue_depth": len(self.queue),
+            "queue_depth_by_priority": self.queue_depth_by_priority(),
             "max_tick_tokens": max(per_tick) if per_tick else 0,
             "ttft_wall_p50": _percentile(ttft_wall, 50),
             "ttft_wall_p95": _percentile(ttft_wall, 95),

@@ -3,6 +3,13 @@
 The decode step is cache-layout agnostic: pass the dense {"k","v"} cache or
 the paged {"k_pages","v_pages","block_table"} cache and decode_step routes
 to the matching kernel (kernels/flash_decode.py).
+
+Lane masking contract (what preemption and chunked prefill lean on): the
+fused decode step computes every lane, but a lane whose `lens` is 0 and
+whose block-table row is zeroed writes its K/V into the reserved null page
+and its `live` mask keeps tokens/lens untouched - so the engine can park,
+preempt, or mid-prefill a slot and still run one batched launch over the
+full width without corrupting any live page.
 """
 from __future__ import annotations
 

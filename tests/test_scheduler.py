@@ -14,10 +14,10 @@ from repro.models import build_model
 from repro.serve import ServeEngine, RequestState, TokenBudgetScheduler
 from repro.serve.scheduler import Request
 
-# mixed traffic in the acceptance shape (128 / 1k / 4k scaled to smoke
-# scale): short prompts interleaved with ones long enough to need many
-# prefill chunks
-MIXED_LENS = (16, 64, 224, 9, 130, 40)
+# shared traffic-replay harness (tests/traffic.py): seeded generators +
+# the serve loop; MIXED_LENS is the acceptance-shape mixed traffic
+from traffic import MIXED_LENS, mixed_prompts as _mixed_prompts, \
+    serve_all as _serve
 
 
 @pytest.fixture(scope="module")
@@ -26,19 +26,6 @@ def model_f32():
     cfg = get_smoke_config("granite-3-2b").replace(dtype="float32")
     m = build_model(cfg)
     return m, m.init(jax.random.PRNGKey(0))
-
-
-def _mixed_prompts(vocab, lens=MIXED_LENS, seed=0):
-    rng = np.random.default_rng(seed)
-    return [rng.integers(1, vocab, size=n).tolist() for n in lens]
-
-
-def _serve(model, params, scfg, prompts, **submit_kw):
-    eng = ServeEngine(model, params, scfg)
-    for p in prompts:
-        eng.submit(p, **submit_kw)
-    done = eng.run_until_done(max_ticks=50_000)
-    return {r.uid: r.out_tokens for r in done}, eng
 
 
 def _base(**over):

@@ -1,0 +1,197 @@
+"""Seeded traffic-replay harness for the serve-path test suites.
+
+One place for the request generators and the replay loop every serve test
+used to hand-roll: mixed-length prompt sets, shared-prefix groups, wave
+traces (a long prompt at the head of each wave with shorts queued behind
+it), priority bursts, and fully random arrival traffic for soak tests.
+Everything is seeded - the same arguments always produce the same trace -
+so parity assertions across engines stay deterministic.
+
+`replay` is the serve-path fixture driver: it submits each item at its
+arrival tick, ticks the engine until the trace drains, and calls
+`ServeEngine.check_invariants()` after EVERY tick (allocator refcount
+conservation, block-table mirroring, prefix-tree consistency, queue/slot
+bookkeeping) so any tick that corrupts page accounting fails at the tick
+that did it, not at the end of the run.
+"""
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve import ServeEngine
+from repro.serve.scheduler import Request
+
+# mixed traffic in the acceptance shape (128 / 1k / 4k scaled to smoke
+# scale): short prompts interleaved with ones long enough to need many
+# prefill chunks
+MIXED_LENS = (16, 64, 224, 9, 130, 40)
+
+
+def mixed_prompts(vocab: int, lens: Sequence[int] = MIXED_LENS,
+                  seed: int = 0) -> List[List[int]]:
+    """The standard mixed-length prompt set (seeded)."""
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, vocab, size=n).tolist() for n in lens]
+
+
+def shared_prefix_prompts(vocab: int, shared_len: int,
+                          tail_lens: Sequence[int],
+                          seed: int = 0) -> List[List[int]]:
+    """One prompt per tail, all sharing one `shared_len`-token prefix
+    (the prefix-cache traffic shape)."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(1, vocab, size=shared_len).tolist()
+    return [shared + rng.integers(1, vocab, size=t).tolist()
+            for t in tail_lens]
+
+
+@dataclass
+class TrafficItem:
+    """One replayed request: submitted at `tick` with the given knobs."""
+    tick: int
+    prompt: List[int]
+    max_new: Optional[int] = None
+    priority: int = 0
+    stop_tokens: Optional[Sequence[int]] = None
+    uid: Optional[int] = None      # filled in by replay() at submit time
+
+
+def wave_arrivals(vocab: int, lens: Sequence[int], waves: int,
+                  period: int = 4, seed: int = 0) -> List[TrafficItem]:
+    """`waves` arrival waves, each [longest, *shorter lens] submitted the
+    same tick - the bubble-inducing shape: every wave's long prompt lands
+    at the head of the queue while earlier waves are mid-decode and the
+    wave's short prompts queue behind it."""
+    rng = np.random.default_rng(seed)
+    order = sorted(lens, reverse=True)
+    return [TrafficItem(w * period,
+                        rng.integers(1, vocab, size=n).tolist())
+            for w in range(waves) for n in order]
+
+
+def priority_burst(vocab: int, background_lens: Sequence[int],
+                   burst_lens: Sequence[int], burst_tick: int,
+                   burst_priority: int = 5,
+                   seed: int = 0) -> List[TrafficItem]:
+    """Low-priority background traffic at tick 0 followed by a burst of
+    high-priority arrivals at `burst_tick` - the preemption-forcing shape
+    when the page pool only fits the background."""
+    rng = np.random.default_rng(seed)
+    items = [TrafficItem(0, rng.integers(1, vocab, size=n).tolist())
+             for n in background_lens]
+    items += [TrafficItem(burst_tick,
+                          rng.integers(1, vocab, size=n).tolist(),
+                          priority=burst_priority)
+              for n in burst_lens]
+    return items
+
+
+def random_arrivals(vocab: int, n_requests: int, seed: int,
+                    max_len: int = 100, max_new: int = 4,
+                    max_tick: int = 20, priorities: Sequence[int] = (0, 1, 2),
+                    shared_prefix_frac: float = 0.3) -> List[TrafficItem]:
+    """Fully random soak traffic: arrival ticks, mixed lengths, random
+    priorities, and a fraction of requests sharing a common prefix (so
+    prefix-cache survival paths get exercised under preemption)."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(1, vocab, size=max_len // 2).tolist()
+    items = []
+    for _ in range(n_requests):
+        n = int(rng.integers(1, max_len + 1))
+        if rng.random() < shared_prefix_frac:
+            prompt = shared[:max(1, n // 2)] \
+                + rng.integers(1, vocab, size=max(1, n // 2)).tolist()
+        else:
+            prompt = rng.integers(1, vocab, size=n).tolist()
+        items.append(TrafficItem(int(rng.integers(0, max_tick + 1)), prompt,
+                                 max_new=int(rng.integers(1, max_new + 1)),
+                                 priority=int(rng.choice(priorities))))
+    items.sort(key=lambda it: it.tick)
+    return items
+
+
+def submit_item(eng: ServeEngine, item: TrafficItem) -> int:
+    item.uid = eng.submit(item.prompt, max_new_tokens=item.max_new,
+                          stop_tokens=item.stop_tokens,
+                          priority=item.priority)
+    return item.uid
+
+
+def replay(eng: ServeEngine, items: Sequence[TrafficItem],
+           max_ticks: int = 50_000, check: bool = True
+           ) -> Tuple[Dict[int, List[int]], List[Request]]:
+    """Drive `eng` through a timed-arrival trace.  Submits each item at
+    its arrival tick, ticks until everything drains, and - with `check`
+    (default) - runs ServeEngine.check_invariants() after every tick.
+    Returns ({uid: out_tokens}, finished Requests in completion order).
+    Raises RuntimeError if the trace does not drain in max_ticks (a
+    deadlocked scheduler must fail loudly, not hang the suite)."""
+    pending = sorted(items, key=lambda it: it.tick)
+    pending_q = list(pending)
+    done: List[Request] = []
+    tick = 0
+    while pending_q or eng.queue or any(s is not None for s in eng.slots):
+        while pending_q and pending_q[0].tick <= tick:
+            submit_item(eng, pending_q.pop(0))
+        done.extend(eng.tick())
+        if check:
+            eng.check_invariants()
+        tick += 1
+        if tick >= max_ticks:
+            raise RuntimeError(
+                f"replay: {max_ticks} ticks exhausted with "
+                f"{len(pending_q)} unsubmitted, {len(eng.queue)} queued, "
+                f"{sum(s is not None for s in eng.slots)} in flight")
+    return {r.uid: r.out_tokens for r in done}, done
+
+
+def assert_greedy_equivalent(model, params, done, want: Dict[int, List[int]],
+                             tol: float = 2e-3):
+    """Assert a run's outputs match the oracle's, tolerating only genuine
+    floating-point argmax near-ties.
+
+    Fast path: bit equality.  Fallback for requests that diverge: the
+    request's emitted trace is TEACHER-FORCED through model.forward and
+    every generated token's logit must be within `tol` of that position's
+    max logit - i.e., the trace is a valid greedy trace up to the ~1e-5
+    kernel-level rounding wobble different schedules legitimately exhibit
+    (different chunk-batch bucket shapes, prefill- vs decode-written KV
+    positions after a preemption resume).  A scheduling bug that corrupts
+    KV (stale page, lost chunk, wrong offset) shifts logits by O(1) and
+    still fails loudly; a near-tie flip passes instead of making the
+    suite a per-process coin flip."""
+    import jax.numpy as jnp
+
+    got = {r.uid: r.out_tokens for r in done}
+    assert got.keys() == want.keys()
+    by_uid = {r.uid: r for r in done}
+    for uid, toks in got.items():
+        if toks == want[uid]:
+            continue
+        assert len(toks) == len(want[uid]), \
+            f"uid {uid}: {len(toks)} tokens vs oracle {len(want[uid])}"
+        req = by_uid[uid]
+        seq = req.prompt + toks
+        out = model.forward(params, {"tokens": jnp.asarray([seq],
+                                                           jnp.int32)})
+        logits = np.asarray(out[0] if isinstance(out, tuple) else out)[0]
+        for i, tok in enumerate(toks):
+            row = logits[len(req.prompt) - 1 + i]
+            gap = float(row.max() - row[tok])
+            assert gap <= tol, \
+                f"uid {uid} token {i}: emitted {tok} sits {gap:.2e} below " \
+                f"the argmax - not a near-tie, the trace is corrupted"
+
+
+def serve_all(model, params, scfg, prompts, check: bool = False,
+              **submit_kw):
+    """Submit every prompt up front and run to completion (the untimed
+    harness the parity tests use).  Returns ({uid: out_tokens}, engine)."""
+    eng = ServeEngine(model, params, scfg)
+    for p in prompts:
+        eng.submit(p, **submit_kw)
+    items_done = eng.run_until_done(max_ticks=50_000)
+    if check:
+        eng.check_invariants()
+    return {r.uid: r.out_tokens for r in items_done}, eng
