@@ -190,6 +190,11 @@ class ServeConfig:
     max_new_tokens: int = 64
     temperature: float = 0.0    # 0 = greedy
     seed: int = 0               # PRNG seed for temperature > 0 sampling
+    # device-side sampling filters (serve/sampling.py), applied in the
+    # standard order logits / temperature -> top-k -> top-p -> categorical;
+    # both are no-ops at temperature 0 (greedy bypasses the filters)
+    top_k: int = 0              # keep only the k highest logits (0 = off)
+    top_p: float = 1.0          # nucleus filter mass (1.0 = off)
     # finishing a request before max_new_tokens: eos_id (engine-wide) and/or
     # per-request submit(..., stop_tokens=...) end generation the tick the
     # token is produced, freeing its pages immediately
@@ -247,6 +252,25 @@ class ServeConfig:
     # behaves exactly like preemption=False.
     preemption: bool = False
 
+    # --- self-speculative decoding (serve/engine.py + serve/drafting.py) ----
+    # speculative=True drafts up to spec_k tokens per decoding request per
+    # tick by prompt-lookup over the request's OWN token history (n-gram
+    # match, no second model) and verifies the whole chain in one launch
+    # through the batched chunk kernel: accepted tokens emit together, the
+    # first mismatch emits the target model's own token instead, so every
+    # verify launch nets >= 1 token and greedy outputs stay equivalent to
+    # non-speculative decoding.  Rejected positions simply fall past the
+    # new `lens` frontier - the causal mask hides them and later writes
+    # overwrite them, so rollback costs nothing and page reservations are
+    # untouched (admission already reserved the worst case).  Drafted
+    # tokens consume tick budget like prefill tokens; the work clock
+    # advances only for ACCEPTED tokens so TTFT/TBT stay comparable with
+    # speculation on or off.  Requires chunked=True and batched=True (the
+    # verify path is the batched chunk path).
+    speculative: bool = False
+    spec_k: int = 4             # max drafted tokens per request per tick
+    spec_ngram: int = 3         # longest n-gram the drafter matches on
+
     # --- paged KV cache (serve/paged_cache.py) ------------------------------
     # paged=True stores K/V in a global page pool indexed through a block
     # table instead of one dense (max_batch, max_seq) strip per slot; only
@@ -284,6 +308,11 @@ class ServeConfig:
         if self.temperature < 0:
             raise ValueError(f"temperature must be >= 0, "
                              f"got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 = off), "
+                             f"got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
         if self.admission_policy not in ("fifo", "sjf"):
             raise ValueError(f"admission_policy must be 'fifo' or 'sjf', "
                              f"got {self.admission_policy!r}")
@@ -323,6 +352,17 @@ class ServeConfig:
         if self.max_chunks_per_tick < 0:
             raise ValueError(f"max_chunks_per_tick must be >= 0, got "
                              f"{self.max_chunks_per_tick}")
+        if self.speculative:
+            if not self.chunked or not self.batched:
+                raise ValueError(
+                    "speculative decoding requires chunked=True and "
+                    "batched=True (draft chains verify through the "
+                    "batched chunk path)")
+            if self.spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {self.spec_k}")
+            if self.spec_ngram < 1:
+                raise ValueError(f"spec_ngram must be >= 1, "
+                                 f"got {self.spec_ngram}")
         if self.preemption and not self.chunked:
             raise ValueError("preemption requires chunked=True (a preempted "
                              "request resumes through the chunked prefill "

@@ -212,7 +212,7 @@ def paged_flash_decode(q, k_pages, v_pages, block_table, cache_len, *,
 
 
 def batched_paged_prefill_attention(q, k_pages, v_pages, page_tables,
-                                    q_offsets, true_lens, *,
+                                    q_offsets, true_lens, q_lens=None, *,
                                     window: int = 0,
                                     logit_softcap: float = 0.0,
                                     scale: Optional[float] = None,
@@ -234,10 +234,10 @@ def batched_paged_prefill_attention(q, k_pages, v_pages, page_tables,
     if impl == "pallas":
         from . import paged_prefill as pp
         return pp.batched_paged_prefill_attention(
-            q, k_pages, v_pages, page_tables, q_offsets, true_lens,
+            q, k_pages, v_pages, page_tables, q_offsets, true_lens, q_lens,
             window=window, logit_softcap=logit_softcap, scale=scale)
     return ref.batched_paged_prefill_attention(
-        q, k_pages, v_pages, page_tables, q_offsets, true_lens,
+        q, k_pages, v_pages, page_tables, q_offsets, true_lens, q_lens,
         window=window, logit_softcap=logit_softcap, scale=scale)
 
 

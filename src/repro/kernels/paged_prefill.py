@@ -68,12 +68,17 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _chunk_kernel(tbl_ref, off_ref, tl_ref, q_ref, k_ref, v_ref, o_ref,
-                  acc_ref, m_ref, l_ref, *, page_size: int, window: int,
-                  scale: float, softcap: float, gq: int, s_suf: int):
-    """tbl_ref: (K, n_max) block-table rows, off_ref/tl_ref: (K,) per-row
-    chunk start / prefill cursor - all scalar-prefetched; k_ref/v_ref hold
-    page j of row b's sequence (the index map already walked the table)."""
+def _chunk_kernel(tbl_ref, off_ref, tl_ref, ql_ref, q_ref, k_ref, v_ref,
+                  o_ref, acc_ref, m_ref, l_ref, *, page_size: int,
+                  window: int, scale: float, softcap: float, gq: int,
+                  s_suf: int):
+    """tbl_ref: (K, n_max) block-table rows, off_ref/tl_ref/ql_ref: (K,)
+    per-row chunk start / prefill cursor / real query count - all
+    scalar-prefetched; k_ref/v_ref hold page j of row b's sequence (the
+    index map already walked the table).  Query rows at or past ql are
+    PAD lanes (a speculative verify row drafts fewer than S - 1 tokens):
+    their output is forced to exactly zero in the finalize, so ragged
+    verify batches stay bit-deterministic whatever the pad rows hold."""
     b = pl.program_id(0)
     j = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -115,14 +120,18 @@ def _chunk_kernel(tbl_ref, off_ref, tl_ref, q_ref, k_ref, v_ref, o_ref,
     @pl.when(j == nk - 1)
     def _finalize():
         l = jnp.maximum(l_ref[...], 1e-20)
-        o = (acc_ref[...] / l).reshape(s_suf, gq, -1)
+        o = acc_ref[...] / l
+        # zero pad query lanes (flattened row r is query index r // gq)
+        ql = ql_ref[b]
+        qidx = jax.lax.broadcasted_iota(jnp.int32, (s_suf * gq, 1), 0) // gq
+        o = jnp.where(qidx < ql, o, 0.0).reshape(s_suf, gq, -1)
         o_ref[0, 0] = o.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "scale",
                                              "logit_softcap"))
 def batched_paged_prefill_attention(q, k_pages, v_pages, page_tables,
-                                    q_offsets, true_lens, *,
+                                    q_offsets, true_lens, q_lens=None, *,
                                     window: int = 0,
                                     scale: Optional[float] = None,
                                     logit_softcap: float = 0.0) -> jax.Array:
@@ -147,8 +156,15 @@ def batched_paged_prefill_attention(q, k_pages, v_pages, page_tables,
                  REAL token (ragged lengths: rows are zero-padded to S).
                  A dead padding row carries 0 and an all-null table row;
                  its output is exactly zero.
-    Returns (K, S, Hq, D); rows beyond true_len - q_offset are garbage
-    (the caller selects real rows' outputs).
+    q_lens:      (K,) int32 per-row REAL query count (the draft-length
+                 lane of the speculative verify path: a verify row holds
+                 1 + m real queries for an m-token draft chain).  Rows at
+                 or past a row's q_len come back as exactly zero, so
+                 ragged batches are bit-deterministic whatever their pad
+                 lanes contain.  Defaults to true_lens - q_offsets (every
+                 non-dead position real), preserving the historical
+                 contract of the chunk-prefill callers.
+    Returns (K, S, Hq, D).
     """
     K, S, Hq, D = q.shape
     ps, Hkv = k_pages.shape[1], k_pages.shape[2]
@@ -158,6 +174,8 @@ def batched_paged_prefill_attention(q, k_pages, v_pages, page_tables,
     page_tables = jnp.asarray(page_tables, jnp.int32)
     off = jnp.asarray(q_offsets, jnp.int32).reshape(K)
     tl = jnp.asarray(true_lens, jnp.int32).reshape(K)
+    ql = jnp.clip(tl - off, 0, S) if q_lens is None \
+        else jnp.asarray(q_lens, jnp.int32).reshape(K)
 
     # head-major GQA grouping, one grid row per (sequence row, KV head)
     qg = q.reshape(K, S, Hkv, G, D).transpose(0, 2, 1, 3, 4)  # (K,Hkv,S,G,D)
@@ -165,19 +183,23 @@ def batched_paged_prefill_attention(q, k_pages, v_pages, page_tables,
                                scale=scale, softcap=logit_softcap, gq=G,
                                s_suf=S)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,       # tables + offsets + true_lens in SMEM
+        # tables + offsets + true_lens + q_lens in SMEM
+        num_scalar_prefetch=4,
         grid=(K, Hkv, n_max),
         in_specs=[
             pl.BlockSpec((1, 1, S, G, D),
-                         lambda b, h, j, tbl, off, tl: (b, h, 0, 0, 0)),
+                         lambda b, h, j, tbl, off, tl, ql: (b, h, 0, 0, 0)),
             # the index map IS the page-table walk: page j of row b
             pl.BlockSpec((1, ps, 1, D),
-                         lambda b, h, j, tbl, off, tl: (tbl[b, j], 0, h, 0)),
+                         lambda b, h, j, tbl, off, tl, ql:
+                         (tbl[b, j], 0, h, 0)),
             pl.BlockSpec((1, ps, 1, D),
-                         lambda b, h, j, tbl, off, tl: (tbl[b, j], 0, h, 0)),
+                         lambda b, h, j, tbl, off, tl, ql:
+                         (tbl[b, j], 0, h, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, S, G, D),
-                               lambda b, h, j, tbl, off, tl: (b, h, 0, 0, 0)),
+                               lambda b, h, j, tbl, off, tl, ql:
+                               (b, h, 0, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((S * G, D), jnp.float32),
             pltpu.VMEM((S * G, 1), jnp.float32),
@@ -191,7 +213,7 @@ def batched_paged_prefill_attention(q, k_pages, v_pages, page_tables,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=_interpret(),
-    )(page_tables, off, tl, qg, k_pages, v_pages)
+    )(page_tables, off, tl, ql, qg, k_pages, v_pages)
     return o.transpose(0, 2, 1, 3, 4).reshape(K, S, Hq, D)
 
 

@@ -220,7 +220,7 @@ def paged_flash_decode(q, k_pages, v_pages, block_table, cache_len, *,
 
 
 def batched_paged_prefill_attention(q, k_pages, v_pages, page_tables,
-                                    q_offsets, true_lens, *,
+                                    q_offsets, true_lens, q_lens=None, *,
                                     scale: Optional[float] = None,
                                     window: int = 0,
                                     logit_softcap: float = 0.0) -> jax.Array:
@@ -273,6 +273,14 @@ def batched_paged_prefill_attention(q, k_pages, v_pages, page_tables,
                   jnp.exp2((s - m_safe) * LOG2E), 0.0)
     l = jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-20)
     o = jnp.einsum("bshgk,bkhd->bshgd", p / l, v.astype(jnp.float32))
+    # q_lens: per-row REAL query count (speculative verify rows hold
+    # 1 + m real queries).  Rows at or past it are forced to exactly
+    # zero, matching the Pallas kernel's draft-length lane; the default
+    # (true_lens - q_offsets) keeps the historical chunk contract.
+    ql = jnp.clip(tl - jnp.asarray(q_offsets, jnp.int32), 0, S) \
+        if q_lens is None else jnp.asarray(q_lens, jnp.int32)
+    qpos = jnp.arange(S, dtype=jnp.int32)[None, :]
+    o = jnp.where((qpos < ql[:, None])[:, :, None, None, None], o, 0.0)
     return o.reshape(K, S, Hq, D).astype(q.dtype)
 
 

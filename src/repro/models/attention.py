@@ -148,7 +148,7 @@ def attn_decode_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
 
 def attn_prefill_chunks_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
                               page_tables, offsets, true_lens, *,
-                              window: int = 0,
+                              q_lens=None, window: int = 0,
                               impl: Optional[str] = None):
     """Prefill a RAGGED BATCH of mid-prompt chunks - K chunks of K
     different sequences, each at its own prompt position - into their
@@ -186,8 +186,8 @@ def attn_prefill_chunks_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
     k_pages = k_pages.at[pages, offs].set(k.astype(k_pages.dtype))
     v_pages = v_pages.at[pages, offs].set(v.astype(v_pages.dtype))
     o = ops.batched_paged_prefill_attention(
-        q, k_pages, v_pages, page_tables, offsets, true_lens, window=window,
-        logit_softcap=cfg.attn_logit_softcap, impl=impl)
+        q, k_pages, v_pages, page_tables, offsets, true_lens, q_lens,
+        window=window, logit_softcap=cfg.attn_logit_softcap, impl=impl)
     y = dense(params["wo"], o.reshape(K, S, cfg.n_heads * cfg.head_dim))
     return y, k_pages, v_pages
 

@@ -48,6 +48,11 @@ class Model:
     # one-launch serve tick packs a whole tick's chunk plan through this.
     # prefill_chunk above is its K=1 special case.
     prefill_chunks: Optional[Callable] = None
+    # speculative verification: the same ragged chunk pass, but returning
+    # EVERY position's logits (K, S, V) instead of each row's last - one
+    # launch scores a whole draft chain per row so the serve engine can
+    # accept/reject it in place (serve/serve_step.py make_spec_verify_step)
+    verify_chunks: Optional[Callable] = None
 
 
 def build_model(cfg: ModelConfig) -> Model:
@@ -287,6 +292,45 @@ def build_model(cfg: ModelConfig) -> Model:
         logits = unembed(params["tok"], x_last, cfg)
         return logits.astype(jnp.float32), cache, lens
 
+    def verify_chunks(params, batch, cache, page_tables, *, impl=None):
+        """Score a ragged batch of SPECULATIVE DRAFT CHAINS: row k holds
+        [pending token, draft_1 .. draft_m] at absolute positions
+        batch["offset"][k] + arange(S) - exactly the prefill_chunks
+        contract (each row's K/V scatters into its pages, then the
+        offset-causal batched kernel attends over everything resident) -
+        but returns EVERY position's logits, because acceptance needs the
+        target distribution at each chain position, not just the last.
+
+        batch adds "q_lens" (K,): the per-row REAL query count (1 + m),
+        fed to the kernel's draft-length lane so pad positions come back
+        as exactly-zero rows (deterministic logits whatever the pad lanes
+        hold).  Returns (logits (K, S, V) float32, cache).  Writing the
+        whole chain's K/V is speculative too: positions past the accepted
+        frontier are simply left behind the row's `lens` - masked by the
+        causal/true_len tests everywhere KV is read - and overwritten by
+        whatever decodes next, so rejection needs no page bookkeeping."""
+        if fam not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                f"speculative verification needs an attention family, "
+                f"got {fam}")
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        offs = jnp.asarray(batch["offset"], jnp.int32)
+        lens = jnp.asarray(batch["true_lens"], jnp.int32)
+        qls = jnp.asarray(batch["q_lens"], jnp.int32)
+        x = embed(params["tok"], tokens, cfg)
+        if not cfg.use_rope and not cfg.rwkv:
+            tbl = sinusoidal_positions(65536, cfg.d_model)
+            pos = jnp.minimum(offs[:, None] + jnp.arange(S)[None, :], 65535)
+            x = x + jnp.take(tbl, pos, axis=0).astype(x.dtype)
+        x = constrain(x, "btd")
+        x, cache = T.stack_prefill_chunks_paged(params["blocks"], x, cfg,
+                                                cache, page_tables, offs,
+                                                lens, q_lens=qls, impl=impl)
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = unembed(params["tok"], x, cfg)
+        return logits.astype(jnp.float32), cache
+
     def prefill_chunk(params, batch, cache, page_row, *, impl=None):
         """Prefill one MID-PROMPT chunk of one sequence's prompt: the K=1
         special case of prefill_chunks.
@@ -399,4 +443,5 @@ def build_model(cfg: ModelConfig) -> Model:
                  prefill_paged=prefill_paged if is_attn else None,
                  prefill_suffix=prefill_suffix if is_attn else None,
                  prefill_chunk=prefill_chunk if is_attn else None,
-                 prefill_chunks=prefill_chunks if is_attn else None)
+                 prefill_chunks=prefill_chunks if is_attn else None,
+                 verify_chunks=verify_chunks if is_attn else None)

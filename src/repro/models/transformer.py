@@ -216,7 +216,7 @@ def stack_prefill_paged(params, x, cfg: ModelConfig, cache, page_ids, *,
 
 def stack_prefill_chunks_paged(params, x, cfg: ModelConfig, cache,
                                page_tables, offsets, true_lens, *,
-                               impl=None):
+                               q_lens=None, impl=None):
     """Paged prefill of a RAGGED BATCH of mid-prompt chunks - K chunks of
     K different sequences at K different prompt positions, ONE pass
     through the stack: x: (K, S, D), row k at absolute positions
@@ -239,8 +239,8 @@ def stack_prefill_chunks_paged(params, x, cfg: ModelConfig, cache,
             cfg, flag,
             lambda w: attn_prefill_chunks_paged(p["attn"], h_in, cfg, kp,
                                                 vp, page_tables, offsets,
-                                                true_lens, window=w,
-                                                impl=impl))
+                                                true_lens, q_lens=q_lens,
+                                                window=w, impl=impl))
         return _ffn_tail(p, x + h, cfg), (kp, vp)
 
     x, (kp, vp) = jax.lax.scan(

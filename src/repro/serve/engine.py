@@ -69,11 +69,32 @@ attaches those pages refcounted, and prefills ONLY the uncached remainder
 - monolithically as a suffix, or as budgeted chunks when chunked (the
 request's prefill cursor simply starts at the cached-prefix boundary).
 
+Self-speculative decoding (ServeConfig.speculative, chunked+batched
+only): each tick, every DECODING slot may propose a draft chain by
+n-gram lookup over its own token history (serve/drafting.py - no second
+model), capped by spec_k, the remaining generation budget, and the
+tick's token budget (drafted tokens consume budget exactly like prefill
+chunks).  All chains verify in ONE extra ragged launch through the same
+batched chunk kernel decode already uses (serve/serve_step.py
+make_spec_verify_step): row r scores [pending, d_1..d_m] at
+offset = lens, the target's token is sampled at every position, and a
+draft token is accepted iff it matches - so the emitted stream is
+distributed exactly as non-speculative decoding (bit-identical under
+greedy), and every chain nets n_acc + 1 >= 1 tokens for one launch.
+Rejection rollback is free: the device sets lens = offset + n_acc + 1
+and everything past it is dead - masked by the offset-causal kernel,
+overwritten by the slot's next write - while the pages stay reserved
+(admission sized them for max_new_tokens up front).  The work clock
+advances only for ACCEPTED tokens, so work-clock latency and the final
+work_tokens total are directly comparable spec-on vs spec-off.
+
 Requests finish on length (max_new_tokens) or on a stop token
 (submit(..., stop_tokens=...) / ServeConfig.eos_id), freeing or
-publishing their pages the same tick.  Sampling is greedy at
-temperature 0; temperature > 0 draws through a PRNG key seeded from
-ServeConfig.seed and threaded on the engine, so runs are reproducible.
+publishing their pages the same tick.  Sampling runs the device-side
+stack in serve/sampling.py: greedy at temperature 0; otherwise
+temperature -> top-k -> top-p -> categorical through a PRNG key seeded
+from ServeConfig.seed and threaded on the engine, so runs are
+reproducible.
 """
 from __future__ import annotations
 
@@ -89,20 +110,21 @@ from ..configs.base import ModelConfig, ServeConfig
 from ..models import Model, build_model
 from .paged_cache import PageAllocator, pages_needed
 from .prefix_cache import RadixPrefixCache
-from .scheduler import (ChunkTask, Request, RequestState,
-                        TokenBudgetScheduler)
+from .scheduler import (ChunkTask, DraftTask, Request, RequestState,
+                        SpecBatch, TokenBudgetScheduler)
 from .serve_step import (make_chunk_batch_step, make_chunk_prefill_step,
                          make_fused_decode_step, make_paged_prefill_step,
-                         make_prefill_step, make_serve_step, sample_token)
+                         make_prefill_step, make_serve_step,
+                         make_spec_verify_step, sample_token)
 
 # attention-family prompts are padded to a multiple of this before the
 # batched prefill, bounding jit recompiles to one per bucket
 PREFILL_BUCKET = 16
 
 # Jitted serve steps are SHARED across every engine built on the same model
-# (and sampling temperature): the steps close over nothing but the model and
-# the temperature, so two engines can execute the very same compiled
-# executables.  That eliminates per-engine recompiles (constructing an
+# (and sampling knobs): the steps close over nothing but the model and the
+# static sampling configuration (temperature, top_k, top_p), so two engines
+# can execute the very same compiled executables.  That eliminates per-engine recompiles (constructing an
 # engine is free once the first one warmed up) and - just as important -
 # keeps greedy outputs bit-identical ACROSS engine instances: near-tie
 # argmaxes are sensitive to last-ulp rounding differences between separate
@@ -119,7 +141,8 @@ PREFILL_BUCKET = 16
 _STEP_CACHE: Dict[int, Any] = {}
 
 
-def _shared_steps(model: Model, temperature: float) -> Dict[str, Any]:
+def _shared_steps(model: Model, temperature: float, top_k: int = 0,
+                  top_p: float = 1.0) -> Dict[str, Any]:
     # keyed by object identity WITH the model pinned in the entry, so an
     # id can never be recycled for a different model
     entry = _STEP_CACHE.get(id(model))
@@ -127,7 +150,8 @@ def _shared_steps(model: Model, temperature: float) -> Dict[str, Any]:
         entry = (model, {})
         _STEP_CACHE[id(model)] = entry
     per_model = entry[1]
-    steps = per_model.get(float(temperature))
+    knobs = (float(temperature), int(top_k), float(top_p))
+    steps = per_model.get(knobs)
     if steps is None:
         # donate the cache through the jit boundary so a tick updates the
         # KV pool in place instead of transiently doubling it (donation is
@@ -143,7 +167,8 @@ def _shared_steps(model: Model, temperature: float) -> Dict[str, Any]:
             # launch: the whole decode phase of a tick is one jitted call
             # and the sampled tokens come back in ONE device_get at tick end
             "decode_fused": _jit_donating_cache(
-                make_fused_decode_step(model, temperature=temperature), 1),
+                make_fused_decode_step(model, temperature=temperature,
+                                       top_k=top_k, top_p=top_p), 1),
             "prefill": _jit_donating_cache(make_prefill_step(model), 2),
         }
         if model.prefill_paged is not None:
@@ -156,8 +181,15 @@ def _shared_steps(model: Model, temperature: float) -> Dict[str, Any]:
             # the one-launch tick: every chunk planned this tick runs as
             # one ragged batch, final-chunk tokens sampled device-side
             steps["prefill_chunks"] = _jit_donating_cache(
-                make_chunk_batch_step(model, temperature=temperature), 2)
-        per_model[float(temperature)] = steps
+                make_chunk_batch_step(model, temperature=temperature,
+                                      top_k=top_k, top_p=top_p), 2)
+        if model.verify_chunks is not None:
+            # the speculative verify launch: one ragged batch scores every
+            # draft chain and folds acceptance into tokens/lens device-side
+            steps["spec_verify"] = _jit_donating_cache(
+                make_spec_verify_step(model, temperature=temperature,
+                                      top_k=top_k, top_p=top_p), 2)
+        per_model[knobs] = steps
     return steps
 
 
@@ -170,7 +202,11 @@ class ServeEngine:
         B = scfg.max_batch
         self.paged = scfg.paged
         self.chunked = scfg.chunked
+        self.speculative = scfg.speculative
         self._attention_family = cfg.family in ("dense", "moe", "vlm")
+        if self.speculative and model.verify_chunks is None:
+            raise ValueError(f"speculative serving needs an attention "
+                             f"family, got {cfg.family}")
         self.prefix: Optional[RadixPrefixCache] = None
         if scfg.prefix_cache and not scfg.paged:
             raise ValueError("prefix_cache requires paged=True")
@@ -224,12 +260,23 @@ class ServeEngine:
         self.jit_calls = 0
         self.host_syncs = 0
         self.launch_log: List[tuple] = []
+        # generation throughput accounting (the speculative speedup
+        # metrics): emitted generation tokens, launches that emit them
+        # (fused decode + spec verify), and KV pages each of those
+        # launches read (host-side ceil(lens / page_size) sums - an
+        # analytic traffic model, not a device counter)
+        self.gen_tokens = 0
+        self.decode_launches = 0
+        self.kv_pages_read = 0
+        # n_acc array of the tick's verify launch, fetched WITH tokens
+        self._spec_nacc: Optional[jax.Array] = None
 
         # jitted steps come from the model-level shared cache: every engine
-        # on this model (at this temperature) runs the SAME executables -
-        # no per-engine recompiles, and bit-identical numerics across
+        # on this model (at these sampling knobs) runs the SAME executables
+        # - no per-engine recompiles, and bit-identical numerics across
         # engine instances (see _shared_steps)
-        steps = _shared_steps(model, scfg.temperature)
+        steps = _shared_steps(model, scfg.temperature, scfg.top_k,
+                              scfg.top_p)
         self._decode = steps["decode"]
         self._decode_fused = steps["decode_fused"]
         self._prefill = steps["prefill"]
@@ -237,6 +284,8 @@ class ServeEngine:
             self._prefill_paged = steps["prefill_paged"]
             self._prefill_chunk = steps["prefill_chunk"]
             self._prefill_chunks = steps["prefill_chunks"]
+        if self.speculative:
+            self._spec_verify = steps["spec_verify"]
 
     # ------------------------------------------------------------------
     @property
@@ -324,6 +373,14 @@ class ServeEngine:
         out["jit_calls"] = self.jit_calls
         out["host_syncs"] = self.host_syncs
         out["compile_count"] = self.compile_cache_size()
+        out["speculative"] = self.speculative
+        out["gen_tokens"] = self.gen_tokens
+        out["decode_launches"] = self.decode_launches
+        out["kv_pages_read"] = self.kv_pages_read
+        out["tokens_per_launch"] = (self.gen_tokens / self.decode_launches
+                                    if self.decode_launches else 0.0)
+        out["tokens_per_kv_page"] = (self.gen_tokens / self.kv_pages_read
+                                     if self.kv_pages_read else 0.0)
         if self.launch_log:
             calls = [r[0] for r in self.launch_log]
             syncs = [r[1] for r in self.launch_log]
@@ -380,7 +437,8 @@ class ServeEngine:
         fns = [self._decode, self._decode_fused, self._prefill,
                getattr(self, "_prefill_paged", None),
                getattr(self, "_prefill_chunk", None),
-               getattr(self, "_prefill_chunks", None)]
+               getattr(self, "_prefill_chunks", None),
+               getattr(self, "_spec_verify", None)]
         return sum(fn._cache_size() for fn in fns
                    if fn is not None and hasattr(fn, "_cache_size"))
 
@@ -396,14 +454,16 @@ class ServeEngine:
     # sampling / emission / completion (shared by all schedules)
     # ------------------------------------------------------------------
     def _sample(self, logits) -> jax.Array:
-        """(B, 1, V) logits -> (B, 1) tokens.  Greedy at temperature 0;
-        otherwise gumbel sampling through the engine's threaded PRNG key
-        (one split per call, so a fixed ServeConfig.seed reproduces the
-        whole trace)."""
+        """(B, 1, V) logits -> (B, 1) tokens through the device-side
+        sampling stack (serve/sampling.py).  Greedy at temperature 0;
+        otherwise temperature -> top-k -> top-p -> categorical through
+        the engine's threaded PRNG key (one split per call, so a fixed
+        ServeConfig.seed reproduces the whole trace)."""
         if self.scfg.temperature <= 0.0:
             return sample_token(logits)
         self._key, sub = jax.random.split(self._key)
         return sample_token(logits, temperature=self.scfg.temperature,
+                            top_k=self.scfg.top_k, top_p=self.scfg.top_p,
                             key=sub)
 
     def _next_key(self) -> jax.Array:
@@ -428,6 +488,7 @@ class ServeEngine:
         work clock (one-launch tick: emission is deferred until after the
         decode launch, but the stamp must match the sequential path)."""
         req.out_tokens.append(tok)
+        self.gen_tokens += 1
         self.sched.note_token(req, time.time(), work=work)
         if tok in req.stop_tokens:
             req.finish_reason = "stop"
@@ -790,6 +851,42 @@ class ServeEngine:
             self.tokens, self.lens, self._next_key())
         return finals
 
+    def _run_spec_verify(self, tasks: List[DraftTask]) -> SpecBatch:
+        """Execute EVERY draft chain planned this tick in ONE jitted
+        launch through the batched chunk kernel: the scheduler packs the
+        chains into a ragged verify batch (pack_drafts) with per-row
+        block-table rows from the host allocator, the device samples the
+        target's token at every chain position, accepts the matching
+        draft prefix, writes the bonus token into the engine's tokens and
+        the new KV frontier into lens (rejected positions past it are
+        dead - rollback is free), and leaves the per-row acceptance
+        counts in _spec_nacc for the host to fetch WITH the tick's
+        tokens - no extra device->host sync."""
+        pack = self.sched.pack_drafts(tasks, self._lens_np)
+        # per-row block-table rows from the host allocator (dead rows
+        # keep the all-null table, copied - never aliased - like
+        # _run_chunk_batch)
+        tables = np.zeros((pack.tokens.shape[0],
+                           self.allocator.table.shape[1]), np.int32)
+        live = pack.row_slots < self.scfg.max_batch
+        tables[live] = self.allocator.table[pack.row_slots[live]]
+        batch = {"tokens": jnp.asarray(pack.tokens),
+                 "offset": jnp.asarray(pack.offsets),
+                 "true_lens": jnp.asarray(pack.true_lens),
+                 "q_lens": jnp.asarray(pack.q_lens),
+                 "draft_lens": jnp.asarray(pack.draft_lens),
+                 "row_slot": jnp.asarray(pack.row_slots)}
+        self.jit_calls += 1
+        self.decode_launches += 1
+        ps = self.scfg.page_size
+        self.kv_pages_read += int(sum(-(-int(t) // ps)
+                                      for t in pack.true_lens[live]))
+        self.cache, self.tokens, self.lens, self._spec_nacc = \
+            self._spec_verify(self.params, batch, self.cache,
+                              jnp.asarray(tables), self.tokens, self.lens,
+                              self._next_key())
+        return pack
+
     # ------------------------------------------------------------------
     # preemption (ServeConfig.preemption): shed low-priority load when the
     # page pool - or the slot table - cannot place a higher-priority
@@ -825,10 +922,30 @@ class ServeEngine:
         snapshots prompt + generated-so-far as its resume target
         (Request.target): the chunk path rebuilds that KV on resume and
         the final resume chunk's logits sample the NEXT token exactly as
-        the uninterrupted decode would have."""
+        the uninterrupted decode would have.
+
+        Publish-on-preempt (prefix cache on): instead of freeing, the
+        victim's fully-written pages PARK in the radix tree keyed by the
+        tokens whose KV they hold - on resume the prefix match re-attaches
+        them and only the lost tail re-prefills; under continued pressure
+        they are ordinary evictable cache.  Only fully-VALID positions
+        publish: prefill_pos for a PREFILLING victim, the lens mirror for
+        a DECODING one (the pending token's KV is unwritten, and any
+        speculative garbage past lens must never enter the tree)."""
         slot = victim.slot
         free0 = self.allocator.free_pages
-        self.allocator.free_slot(slot)
+        if self.prefix is not None:
+            if victim.state is RequestState.PREFILLING:
+                n_valid = victim.prefill_pos
+                seq = list(victim.target)
+            else:
+                seq = victim.prompt + list(victim.out_tokens)
+                n_valid = int(self._lens_np[slot])
+            cached0 = self.prefix.cached_pages
+            self.prefix.release(slot, seq[:n_valid])
+            self.sched.pages_parked += self.prefix.cached_pages - cached0
+        else:
+            self.allocator.free_slot(slot)
         self.sched.pages_reclaimed += self.allocator.free_pages - free0
         self.sched.preemptions += 1
         victim.n_preemptions += 1
@@ -924,7 +1041,18 @@ class ServeEngine:
         prefilling = [(i, r) for i, r in enumerate(self.slots)
                       if r is not None
                       and r.state is RequestState.PREFILLING]
-        budget = self.sched.prefill_budget(len(decode_slots))
+        # speculative drafting: DECODING slots may propose chains out of
+        # the budget left after every decode slot took its guaranteed
+        # token; prefill planning gets what remains after drafts, so the
+        # tick's total work stays bounded by tick_token_budget
+        spec_tasks: List[DraftTask] = []
+        spec_tokens = 0
+        if self.speculative and decode_slots:
+            room = self.scfg.tick_token_budget - len(decode_slots)
+            spec_tasks = self.sched.plan_drafts(
+                [(i, self.slots[i]) for i in decode_slots], room)
+            spec_tokens = sum(len(t.draft) for t in spec_tasks)
+        budget = self.sched.prefill_budget(len(decode_slots) + spec_tokens)
         chunks = self.sched.plan_chunks(prefilling, budget)
         self._tick_profile = (len(chunks), len(decode_slots))
         finals = []
@@ -934,30 +1062,62 @@ class ServeEngine:
             else:
                 for task in chunks:
                     self._run_chunk(task)
-        if decode_slots:
-            if self.prefix is not None:
-                self._cow_guard()
+        # drafted slots verify their whole chain in the spec launch; the
+        # rest take their one token through the fused decode as before
+        spec_slots = {t.slot for t in spec_tasks}
+        plain_slots = [i for i in decode_slots if i not in spec_slots]
+        if decode_slots and self.prefix is not None:
+            self._cow_guard({t.slot: len(t.draft) for t in spec_tasks})
+        spec_pack = None
+        if spec_tasks:
+            spec_pack = self._run_spec_verify(spec_tasks)
+        if plain_slots:
             live = np.zeros((len(self.slots),), bool)
-            live[decode_slots] = True
+            live[plain_slots] = True
             self.jit_calls += 1
+            self.decode_launches += 1
+            self.kv_pages_read += sum(
+                -(-(int(self._lens_np[i]) + 1) // self.scfg.page_size)
+                for i in plain_slots)
             self.cache, self.tokens, self.lens = self._decode_fused(
                 self.params, self.cache, self.tokens, self.lens,
                 jnp.asarray(live), self._next_key())
-            self.sched.note_work(len(decode_slots))
-            self._lens_np[decode_slots] += 1
-        if finals or decode_slots:
+            self.sched.note_work(len(plain_slots))
+            self._lens_np[plain_slots] += 1
+        gen_work = len(plain_slots)
+        if finals or plain_slots or spec_pack is not None:
             # THE device->host transfer: every sampled token of the tick
-            toks = self._fetch_tokens()
+            # (plus, speculating, every chain's acceptance count)
+            if spec_pack is not None:
+                self.host_syncs += 1
+                toks, naccs = (np.asarray(x) for x in jax.device_get(
+                    (self.tokens, self._spec_nacc)))
+            else:
+                toks = self._fetch_tokens()
             for req, slot, work in finals:
                 if self._emit(req, int(toks[slot, 0]), work=work):
                     self._finish(req)
-            for i in decode_slots:
+            if spec_pack is not None:
+                for r, t in enumerate(spec_pack.tasks):
+                    n = int(naccs[r])
+                    self.sched.note_spec(len(t.draft), n)
+                    self._lens_np[t.slot] = t.offset + n + 1
+                    # accepted draft prefix + the target's bonus token;
+                    # work-clock advances per ACCEPTED token only, so
+                    # work_tokens match a non-speculative run exactly
+                    chain = list(t.draft[:n]) + [int(toks[t.slot, 0])]
+                    for tok in chain:
+                        self.sched.note_work(1)
+                        gen_work += 1
+                        if self._emit(t.req, tok):
+                            self._finish(t.req)
+                            break
+            for i in plain_slots:
                 req = self.slots[i]
                 if self._emit(req, int(toks[i, 0])):
                     self._finish(req)
-        n_decode = len(decode_slots)
-        self.sched.note_tick(n_decode,
-                             self.sched.work_clock - w0 - n_decode)
+        self.sched.note_tick(gen_work,
+                             self.sched.work_clock - w0 - gen_work)
         if self._finished_this_tick:
             self._maybe_evict_watermark()
         if self._table_dirty:
@@ -965,27 +1125,33 @@ class ServeEngine:
         return self._finished_this_tick
 
     # ------------------------------------------------------------------
-    def _cow_guard(self):
+    def _cow_guard(self, spec_spans: Optional[Dict[int, int]] = None):
         """Give any decoding slot about to WRITE into a shared page a
         private copy first.  By construction generation pages are private
         (the one structural COW happens at admission), so this is a cheap
         defensive sweep - but it makes 'decode never corrupts a cached
         page' an invariant of the tick loop rather than of the admission
         math.  Slots still prefilling are skipped: their decode write lane
-        is masked to the null page, not to table[lens // page_size]."""
+        is masked to the null page, not to table[lens // page_size].
+        `spec_spans` maps slots with a planned draft chain to its length
+        m: the verify launch writes positions lens .. lens + m, so every
+        page that range touches gets the same guard."""
         ps = self.scfg.page_size
         lens = self._lens_np          # host mirror: no device->host sync
+        spans = spec_spans or {}
         dirty = False
         for i, req in enumerate(self.slots):
             if req is None or req.state is not RequestState.DECODING:
                 continue
-            idx = int(lens[i]) // ps
-            page = int(self.allocator.table[i, idx])
-            if self.allocator.refcount(page) > 1:
-                src, dst = self.allocator.cow(i, idx)
-                self._copy_page(src, dst)
-                self.cow_copies += 1
-                dirty = True
+            lo = int(lens[i]) // ps
+            hi = (int(lens[i]) + spans.get(i, 0)) // ps
+            for idx in range(lo, hi + 1):
+                page = int(self.allocator.table[i, idx])
+                if self.allocator.refcount(page) > 1:
+                    src, dst = self.allocator.cow(i, idx)
+                    self._copy_page(src, dst)
+                    self.cow_copies += 1
+                    dirty = True
         if dirty:
             self._sync_table()
 
@@ -1040,6 +1206,11 @@ class ServeEngine:
         live = np.zeros((len(self.slots),), bool)
         live[active] = True
         self.jit_calls += 1
+        self.decode_launches += 1
+        if self.paged:
+            self.kv_pages_read += sum(
+                -(-(int(self._lens_np[i]) + 1) // self.scfg.page_size)
+                for i in active)
         self.cache, self.tokens, self.lens = self._decode_fused(
             self.params, self.cache, self.tokens, self.lens,
             jnp.asarray(live), self._next_key())

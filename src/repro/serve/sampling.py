@@ -1,0 +1,137 @@
+"""Device-side sampling stack: top-k / top-p / temperature sampling and
+speculative acceptance as PURE jittable functions.
+
+Every serving step that turns logits into tokens routes through here -
+the fused decode step, the batched chunk step's final-row sampling, and
+the speculative verify step (serve/serve_step.py) - so greedy, top-k,
+top-p, and temperature sampling behave identically across every launch
+shape, and the host-side `_sample` fallback paths in serve/engine.py run
+the very same functions.  The filter knobs (temperature, top_k, top_p)
+are Python-level statics closed over by the step factories: a jitted
+step compiles the exact filter pipeline its config asked for, with no
+device-side branching.
+
+Filter order follows the de-facto standard (HF generate):
+
+    logits -> / temperature -> top-k mask -> top-p mask -> categorical
+
+Greedy is the temperature <= 0 limit and bypasses the PRNG entirely (the
+key argument is ignored), so greedy steps stay key-free and bit-stable.
+
+Speculative acceptance (`speculative_accept`) implements sample-and-
+compare verification for a DETERMINISTIC draft proposal (self-drafting:
+the n-gram drafter proposes one concrete chain, serve/drafting.py).  At
+every chain position the TARGET model's token is sampled exactly as
+non-speculative decoding would have sampled it; a draft token is
+accepted iff it equals that sample.  With a delta-distribution proposal
+q = delta(d) this IS the standard speculative rejection-sampling rule
+(accept d with probability p(d); on rejection the residual distribution
+is p with d zeroed - which is exactly "emit the target sample that
+differed"), and because the emitted token at every position is the
+target's own sample, the emitted stream is distributed token-for-token
+identically to non-speculative decoding: greedy chains are bit-identical
+(modulo kernel-rounding near-ties) and sampled chains are exact draws
+from the target distribution.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def apply_top_k(logits: jax.Array, k: int) -> jax.Array:
+    """Mask all but the k highest logits of the last axis to -inf.
+    k <= 0 (or k >= vocab) disables the filter.  Ties at the k-th value
+    keep every tied token (the mask is a >= threshold test), so the
+    support is well-defined without an arbitrary tie-break."""
+    v = logits.shape[-1]
+    if k <= 0 or k >= v:
+        return logits
+    kth = jnp.sort(logits, axis=-1)[..., v - k][..., None]
+    return jnp.where(logits >= kth, logits, NEG_INF)
+
+
+def apply_top_p(logits: jax.Array, p: float) -> jax.Array:
+    """Nucleus filter: keep the smallest set of highest-probability
+    tokens whose cumulative probability reaches p; mask the rest to
+    -inf.  p >= 1 disables the filter; the argmax token is always kept
+    (even when its probability alone exceeds p)."""
+    if p >= 1.0:
+        return logits
+    sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # token i (sorted desc) survives while the mass BEFORE it is < p;
+    # the first token has zero mass before it, so it always survives
+    keep_sorted = (cum - probs) < p
+    # threshold back in logit space: the smallest surviving sorted logit
+    n_keep = jnp.sum(keep_sorted, axis=-1, keepdims=True)
+    thresh = jnp.take_along_axis(sorted_logits, n_keep - 1, axis=-1)
+    return jnp.where(logits >= thresh, logits, NEG_INF)
+
+
+def sample(logits: jax.Array, key: Optional[jax.Array] = None, *,
+           temperature: float = 0.0, top_k: int = 0,
+           top_p: float = 1.0) -> jax.Array:
+    """logits (..., V) -> tokens (...) int32 through the standard filter
+    pipeline.  temperature <= 0 is greedy argmax (key ignored - may be
+    None); otherwise `key` is required and the draw is a categorical over
+    the filtered, temperature-scaled logits."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / temperature
+    scaled = apply_top_k(scaled, top_k)
+    scaled = apply_top_p(scaled, top_p)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+def sample_chain(logits: jax.Array, key: Optional[jax.Array] = None, *,
+                 temperature: float = 0.0, top_k: int = 0,
+                 top_p: float = 1.0) -> jax.Array:
+    """Per-position sampling for speculative verification: logits
+    (K, S, V) -> tokens (K, S) int32, every (row, position) drawn with an
+    INDEPENDENT key derived from `key` (greedy needs none).  Conditional
+    on its prefix each position's token is distributed exactly as one
+    non-speculative decode step would have drawn it."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    K, S, _ = logits.shape
+    keys = jax.random.split(key, K * S).reshape(K, S, -1)
+    scaled = logits / temperature
+    scaled = apply_top_k(scaled, top_k)
+    scaled = apply_top_p(scaled, top_p)
+    return jax.vmap(jax.vmap(
+        lambda k_, l_: jax.random.categorical(k_, l_)))(
+            keys, scaled).astype(jnp.int32)
+
+
+def speculative_accept(target_tokens: jax.Array, draft_tokens: jax.Array,
+                       draft_lens: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Sample-and-compare acceptance for deterministic draft chains.
+
+    target_tokens (K, S): the target model's sampled token at every
+        chain position (position j conditions on the pending token and
+        drafts 1..j, so target_tokens[:, j] is the token decoding would
+        emit after accepting j drafts);
+    draft_tokens  (K, S): row = [pending, d_1 .. d_m, pad...];
+    draft_lens    (K,):   m per row (0 <= m <= S - 1).
+
+    Returns (n_acc (K,), bonus (K,)): n_acc = length of the longest
+    prefix of the draft chain matching the target's samples (capped at
+    draft_lens); bonus = target_tokens[:, n_acc] - the correction token
+    on first mismatch, or the free extra token when the whole chain
+    matched.  Every verify launch therefore emits n_acc + 1 >= 1 tokens.
+    """
+    S = draft_tokens.shape[1]
+    pos = jnp.arange(S - 1, dtype=jnp.int32)[None, :]
+    m = jnp.asarray(draft_lens, jnp.int32)[:, None]
+    match = (target_tokens[:, :-1] == draft_tokens[:, 1:]) & (pos < m)
+    n_acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+    bonus = jnp.take_along_axis(target_tokens, n_acc[:, None],
+                                axis=1)[:, 0]
+    return n_acc, bonus

@@ -54,6 +54,7 @@ from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..configs.base import ServeConfig
+from .drafting import ngram_draft
 
 
 class RequestState(str, Enum):
@@ -175,6 +176,37 @@ class ChunkBatch:
         return len(self.tasks)
 
 
+@dataclass(frozen=True)
+class DraftTask:
+    """One planned speculative verify lane: `draft` proposed tokens for
+    `req` (DECODING in slot `slot`), whose KV frontier sits at absolute
+    position `offset` (= the slot's lens at planning time).  The verify
+    row's tokens are [pending, *draft]: the pending token's KV write plus
+    the draft chain, scored in one ragged-chunk launch."""
+    req: Request
+    slot: int
+    offset: int
+    draft: Tuple[int, ...]
+
+
+@dataclass(frozen=True)
+class SpecBatch:
+    """One tick's planned draft chains packed into a device-ready ragged
+    batch for the verify step: row r describes tasks[r] in the
+    prefill_chunks layout - tokens [pending, d_1..d_m, pad] at offset =
+    the slot's lens, true_len = lens + 1 + m, q_lens = 1 + m (the
+    kernel's draft-length lane), draft_lens = m for acceptance masking.
+    Rows past len(tasks) are DEAD padding up to the power-of-two bucket
+    (all-zero, sentinel slot dropped by the device scatter)."""
+    tasks: Tuple[DraftTask, ...]
+    tokens: np.ndarray       # (K_pad, spec_k + 1) int32
+    offsets: np.ndarray      # (K_pad,) int32: each slot's lens
+    true_lens: np.ndarray    # (K_pad,) int32: lens + 1 + m
+    q_lens: np.ndarray       # (K_pad,) int32: 1 + m
+    draft_lens: np.ndarray   # (K_pad,) int32: m
+    row_slots: np.ndarray    # (K_pad,) int32 slot; sentinel max_batch pads
+
+
 def _percentile(xs: Sequence[float], p: float) -> float:
     return float(np.percentile(np.asarray(list(xs), np.float64), p)) \
         if xs else 0.0
@@ -198,6 +230,15 @@ class TokenBudgetScheduler:
         self.preemptions = 0         # victims shed
         self.resumes = 0             # preempted requests re-admitted
         self.pages_reclaimed = 0     # pages returned to the pool by shedding
+        self.pages_parked = 0        # victim pages published into the tree
+        # speculative-decoding accounting (serve/drafting.py proposes,
+        # the engine's verify launch accepts/rejects).  Drafted tokens
+        # consume tick budget but NOT work clock: the work clock advances
+        # only for ACCEPTED (emitted) tokens, so work-clock TTFT/TBT and
+        # the final work_tokens total are directly comparable between
+        # speculative-on and speculative-off runs of the same trace.
+        self.spec_drafted = 0        # draft tokens verified
+        self.spec_accepted = 0       # draft tokens accepted (emitted)
         # per-tick budget accounting: (decode_tokens, prefill_tokens)
         self.tick_log: List[Tuple[int, int]] = []
 
@@ -336,6 +377,79 @@ class TokenBudgetScheduler:
         return ChunkBatch(tuple(tasks), tokens, offsets, true_lens,
                           final_slots, row_slots)
 
+    # -- speculative drafting ----------------------------------------------
+    def plan_drafts(self, decoding: Sequence[Tuple[int, Request]],
+                    room: int) -> List[DraftTask]:
+        """Propose draft chains for this tick's DECODING slots by n-gram
+        lookup over each request's own token history (prompt + generated
+        so far).  Drafted tokens consume tick budget: `room` is the
+        budget left after every decode slot took its guaranteed token
+        (the engine hands prefill planning what remains after drafts, so
+        budget stays a hard ceiling).  Per-request caps: spec_k, and
+        remaining_new - 1 so a fully accepted chain plus its bonus token
+        can never overrun the generation budget - or the page
+        reservation, which admission sized for exactly max_new_tokens.
+        Slots are visited in slot order (deterministic); a request whose
+        history never repeats gets no draft and decodes normally."""
+        if room <= 0:
+            return []
+        scfg = self.scfg
+        tasks: List[DraftTask] = []
+        for slot, req in decoding:
+            cap = min(scfg.spec_k, req.remaining_new - 1, room)
+            if cap < 1:
+                continue
+            draft = ngram_draft(req.prompt + req.out_tokens, cap,
+                                scfg.spec_ngram)
+            if not draft:
+                continue
+            tasks.append(DraftTask(req, slot, -1, tuple(draft)))
+            room -= len(draft)
+            if room <= 0:
+                break
+        return tasks
+
+    def pack_drafts(self, tasks: Sequence[DraftTask],
+                    lens: np.ndarray) -> SpecBatch:
+        """Pack one tick's draft chains into the ragged batch the verify
+        launch scores: row r = [pending token, draft chain, pad] at
+        offset lens[slot], bucketed to the next power of two like
+        pack_chunks so steady-state traffic reuses a handful of compiled
+        shapes.  `lens` is the engine's host lens mirror (the pending
+        token of a DECODING slot is its last emitted token; its KV is
+        not yet written, which is why the row starts at offset = lens
+        and carries 1 + m real queries)."""
+        s_spec = self.scfg.spec_k + 1
+        k_pad = bucket_rows(len(tasks))
+        sentinel = self.scfg.max_batch
+        tokens = np.zeros((k_pad, s_spec), np.int32)
+        offsets = np.zeros((k_pad,), np.int32)
+        true_lens = np.zeros((k_pad,), np.int32)
+        q_lens = np.zeros((k_pad,), np.int32)
+        draft_lens = np.zeros((k_pad,), np.int32)
+        row_slots = np.full((k_pad,), sentinel, np.int32)
+        packed = []
+        for r, t in enumerate(tasks):
+            m = len(t.draft)
+            off = int(lens[t.slot])
+            tokens[r, 0] = t.req.out_tokens[-1]
+            tokens[r, 1:1 + m] = t.draft
+            offsets[r] = off
+            true_lens[r] = off + 1 + m
+            q_lens[r] = 1 + m
+            draft_lens[r] = m
+            row_slots[r] = t.slot
+            packed.append(DraftTask(t.req, t.slot, off, t.draft))
+        return SpecBatch(tuple(packed), tokens, offsets, true_lens,
+                         q_lens, draft_lens, row_slots)
+
+    def note_spec(self, drafted: int, accepted: int):
+        """Record one verify lane's outcome: `drafted` tokens proposed,
+        `accepted` of them emitted.  Counters only - the work clock is
+        advanced by the engine per ACCEPTED token at emission time."""
+        self.spec_drafted += drafted
+        self.spec_accepted += accepted
+
     # -- accounting --------------------------------------------------------
     def note_work(self, n_tokens: int):
         self.work_clock += n_tokens
@@ -393,6 +507,11 @@ class TokenBudgetScheduler:
             "preemptions": self.preemptions,
             "resumes": self.resumes,
             "pages_reclaimed": self.pages_reclaimed,
+            "pages_parked": self.pages_parked,
+            "spec_drafted": self.spec_drafted,
+            "spec_accepted": self.spec_accepted,
+            "spec_acceptance_rate": self.spec_accepted / self.spec_drafted
+            if self.spec_drafted else 0.0,
             "queue_depth": len(self.queue),
             "queue_depth_by_priority": self.queue_depth_by_priority(),
             "max_tick_tokens": max(per_tick) if per_tick else 0,

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..models import Model
+from . import sampling
 
 
 def make_serve_step(model: Model, *, seq_parallel: bool = False):
@@ -84,7 +85,8 @@ def make_chunk_prefill_step(model: Model):
     return chunk_prefill_step
 
 
-def make_chunk_batch_step(model: Model, *, temperature: float):
+def make_chunk_batch_step(model: Model, *, temperature: float,
+                          top_k: int = 0, top_p: float = 1.0):
     """chunk_batch_step(params, batch, cache, page_tables, tokens, lens,
     key) -> (cache, tokens, lens).  ONE jitted launch for a whole tick's
     prefill plan: executes every packed chunk row (Model.prefill_chunks),
@@ -103,10 +105,8 @@ def make_chunk_batch_step(model: Model, *, temperature: float):
                          key):
         logits, cache, cursors = model.prefill_chunks(params, batch, cache,
                                                       page_tables)
-        if temperature <= 0.0:
-            toks = sample_token(logits)
-        else:
-            toks = sample_token(logits, temperature=temperature, key=key)
+        toks = sample_token(logits, temperature=temperature, top_k=top_k,
+                            top_p=top_p, key=key)
         slots = batch["final_slot"]
         tokens = tokens.at[slots, 0].set(toks[:, 0], mode="drop")
         lens = lens.at[slots].set(cursors, mode="drop")
@@ -115,7 +115,8 @@ def make_chunk_batch_step(model: Model, *, temperature: float):
     return chunk_batch_step
 
 
-def make_fused_decode_step(model: Model, *, temperature: float):
+def make_fused_decode_step(model: Model, *, temperature: float,
+                           top_k: int = 0, top_p: float = 1.0):
     """fused_decode_step(params, cache, tokens, lens, live, key) ->
     (cache, tokens, lens).  One batched decode step with sampling fused
     in: lanes where `live` (B,) is True get their sampled token written
@@ -126,10 +127,8 @@ def make_fused_decode_step(model: Model, *, temperature: float):
 
     def fused_decode_step(params, cache, tokens, lens, live, key):
         logits, cache = model.decode_step(params, tokens, lens, cache)
-        if temperature <= 0.0:
-            toks = sample_token(logits)
-        else:
-            toks = sample_token(logits, temperature=temperature, key=key)
+        toks = sample_token(logits, temperature=temperature, top_k=top_k,
+                            top_p=top_p, key=key)
         tokens = jnp.where(live[:, None], toks, tokens)
         lens = lens + live.astype(lens.dtype)
         return cache, tokens, lens
@@ -137,11 +136,54 @@ def make_fused_decode_step(model: Model, *, temperature: float):
     return fused_decode_step
 
 
-def sample_token(logits, *, temperature: float = 0.0,
-                 key: Optional[jax.Array] = None):
-    """logits: (B, 1, V) -> (B, 1) int32."""
-    if temperature <= 0.0:
-        return jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-    g = jax.random.gumbel(key, logits[:, -1].shape)
-    return jnp.argmax(logits[:, -1] / temperature + g, -1
-                      ).astype(jnp.int32)[:, None]
+def make_spec_verify_step(model: Model, *, temperature: float,
+                          top_k: int = 0, top_p: float = 1.0):
+    """spec_verify_step(params, batch, cache, page_tables, tokens, lens,
+    key) -> (cache, tokens, lens, n_acc).  ONE jitted launch verifies
+    every draft chain the scheduler planned this tick (SpecBatch,
+    serve/scheduler.py): row r holds [pending token, d_1..d_m] at
+    offset = the slot's lens, scored through the batched chunk kernel
+    (Model.verify_chunks) exactly as decode would have scored them one
+    launch at a time - the chain's K/V scatters into the slot's reserved
+    pages as a side effect, so accepted tokens need no re-decode.
+
+    Acceptance is sample-and-compare (serve/sampling.py): the target's
+    token is sampled at every chain position and a draft token is
+    accepted iff it matches; the first mismatch (or chain end) yields
+    the target's own token as the bonus, so every row nets n_acc + 1
+    tokens.  The device updates tokens[slot] to the bonus (the new
+    pending token) and lens[slot] to offset + n_acc + 1 (the new KV
+    frontier: everything past it is rejected garbage the causal mask
+    hides and later writes overwrite - rollback is free).  The host
+    learns n_acc in the SAME fetch as the tick's tokens and reconstructs
+    the accepted prefix from its own copy of the draft.
+
+    batch: SpecBatch arrays - "tokens" (K, spec_k+1), "offset",
+    "true_lens", "q_lens", "draft_lens", "row_slot" (K,) with dead pad
+    rows carrying the out-of-range sentinel max_batch the mode="drop"
+    scatter discards."""
+
+    def spec_verify_step(params, batch, cache, page_tables, tokens, lens,
+                         key):
+        logits, cache = model.verify_chunks(params, batch, cache,
+                                            page_tables)
+        tgt = sampling.sample_chain(logits, key, temperature=temperature,
+                                    top_k=top_k, top_p=top_p)
+        n_acc, bonus = sampling.speculative_accept(
+            tgt, batch["tokens"], batch["draft_lens"])
+        slots = batch["row_slot"]
+        tokens = tokens.at[slots, 0].set(bonus, mode="drop")
+        lens = lens.at[slots].set(
+            batch["offset"] + n_acc + 1, mode="drop")
+        return cache, tokens, lens, n_acc
+
+    return spec_verify_step
+
+
+def sample_token(logits, *, temperature: float = 0.0, top_k: int = 0,
+                 top_p: float = 1.0, key: Optional[jax.Array] = None):
+    """logits: (B, 1, V) -> (B, 1) int32 through the device-side sampling
+    stack (serve/sampling.py): greedy at temperature <= 0 (key ignored),
+    otherwise temperature -> top-k -> top-p -> categorical."""
+    return sampling.sample(logits[:, -1], key, temperature=temperature,
+                           top_k=top_k, top_p=top_p)[:, None]

@@ -359,6 +359,44 @@ def test_resume_via_prefix_cache_reuses_survivors(model_f32):
     eng.check_invariants()
 
 
+def test_preempt_publishes_victim_pages(model_f32):
+    """Publish-on-preempt: shedding a victim with a prefix cache active
+    PARKS its computed KV pages in the tree (refcounted) instead of
+    discarding them, so the resume re-attaches them as cache hits and
+    only recomputes the unparked tail.  Refcounts conserve throughout:
+    right after the shed the tree is the sole owner of every parked
+    page, and the drained engine balances used == cached."""
+    m, params = model_f32
+    eng = ServeEngine(m, params, _cfg(max_batch=2, prefix_cache=True))
+    uid = eng.submit(list(range(1, 97)), max_new_tokens=8)   # 12 pages
+    req = None
+    for _ in range(12):                            # prefill -> decoding
+        eng.tick()
+        req = next((r for r in eng.slots if r is not None), None)
+        if req is not None and req.state is RequestState.DECODING:
+            break
+    assert req is not None and req.state is RequestState.DECODING
+    parked0, cached0 = eng.sched.pages_parked, eng.prefix.cached_pages
+    eng._preempt(req)
+    eng.check_invariants()
+    parked = eng.sched.pages_parked - parked0
+    assert parked >= 12                            # whole prompt parked
+    assert eng.prefix.cached_pages - cached0 == parked
+    # the tree is now the sole owner: nothing else maps pages
+    assert eng.allocator.used_pages == eng.prefix.cached_pages
+    assert eng.stats()["pages_parked"] == eng.sched.pages_parked
+    # the resume re-attaches the parked pages as prefix hits
+    hit0 = eng.prefill_tokens
+    done = eng.run_until_done(max_ticks=10_000)
+    assert done[-1].uid == uid and done[-1].n_resumes == 1
+    assert len(done[-1].out_tokens) == 8
+    assert eng.prefix_hit_tokens >= parked * PAGE - PAGE   # COW'd tail
+    assert eng.prefill_tokens - hit0 <= len(req.target) + 2 * PAGE \
+        - eng.prefix_hit_tokens + req.max_new_tokens
+    eng.check_invariants()
+    assert eng.allocator.used_pages == eng.prefix.cached_pages
+
+
 def test_refcount_conservation_across_preempt_cycles(model_f32):
     """Repeated forced preempt/resume cycles conserve page accounting:
     after every cycle the allocator balances and no page leaks."""

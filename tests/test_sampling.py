@@ -1,0 +1,243 @@
+"""Device-side sampling stack (serve/sampling.py): unit + property tests.
+
+Two layers: deterministic property checks that always run (the sampling
+stack is load-bearing for the serve path, so it must be tested even
+where hypothesis is not installed), and randomized hypothesis versions
+of the same properties that run when it is (`pip install -r
+requirements-dev.txt`)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve.sampling import (NEG_INF, apply_top_k, apply_top_p,
+                                  sample, sample_chain, speculative_accept)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
+except ImportError:
+    HAVE_HYP = False
+
+
+def _rows(seed, shape):
+    return np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+
+# ===========================================================================
+# top-k: support-set correctness
+# ===========================================================================
+
+def _check_top_k(logits: np.ndarray, k: int):
+    out = np.asarray(apply_top_k(jnp.asarray(logits), k))
+    V = logits.shape[-1]
+    for row_in, row_out in zip(logits.reshape(-1, V), out.reshape(-1, V)):
+        kept = row_out > NEG_INF / 2
+        if k <= 0 or k >= V:
+            assert kept.all()                      # filter disabled
+            np.testing.assert_array_equal(row_out, row_in)
+            continue
+        kth = np.sort(row_in)[V - k]
+        # support = exactly the logits >= the k-th largest (ties kept)
+        np.testing.assert_array_equal(kept, row_in >= kth)
+        # surviving logits pass through unchanged
+        np.testing.assert_array_equal(row_out[kept], row_in[kept])
+        assert kept.sum() >= k                     # ties can only widen
+
+
+def test_top_k_support():
+    logits = _rows(0, (4, 16))
+    for k in (0, 1, 3, 15, 16, 99):
+        _check_top_k(logits, k)
+
+
+def test_top_k_ties_kept():
+    row = np.array([[1.0, 5.0, 5.0, 0.0]], np.float32)
+    out = np.asarray(apply_top_k(jnp.asarray(row), 1))
+    assert (out[0] > NEG_INF / 2).sum() == 2       # both 5.0s survive
+
+
+# ===========================================================================
+# top-p: nucleus correctness + renormalization
+# ===========================================================================
+
+def _check_top_p(logits: np.ndarray, p: float):
+    out = np.asarray(apply_top_p(jnp.asarray(logits), p))
+    V = logits.shape[-1]
+    for row_in, row_out in zip(logits.reshape(-1, V), out.reshape(-1, V)):
+        kept = row_out > NEG_INF / 2
+        assert kept[np.argmax(row_in)]             # argmax always survives
+        np.testing.assert_array_equal(row_out[kept], row_in[kept])
+        order = np.argsort(-row_in, kind="stable")
+        probs = jax.nn.softmax(jnp.asarray(row_in))
+        cum = np.cumsum(np.asarray(probs)[order])
+        # kept set is a prefix of the descending sort whose mass BEFORE
+        # each kept element is < p (the standard nucleus rule)
+        in_prefix = (cum - np.asarray(probs)[order]) < p
+        want = np.zeros(V, bool)
+        want[order[in_prefix]] = True
+        # fp-tolerant comparison at the nucleus boundary: logits tied
+        # with the boundary element may legitimately differ in sort order
+        boundary = row_in[order[in_prefix]].min()
+        disputed = np.abs(row_in - boundary) <= 1e-6
+        np.testing.assert_array_equal(kept[~disputed], want[~disputed])
+
+
+def test_top_p_support():
+    logits = _rows(1, (4, 16))
+    for p in (0.1, 0.5, 0.9, 1.0):
+        _check_top_p(logits, p)
+
+
+def test_top_p_renormalizes():
+    """softmax after the filter = the kept probs renormalized to 1."""
+    row = jnp.asarray(_rows(2, (1, 12)))
+    out = apply_top_p(row, 0.7)
+    kept = np.asarray(out[0]) > NEG_INF / 2
+    probs = np.asarray(jax.nn.softmax(out[0]))
+    assert abs(probs.sum() - 1.0) < 1e-6
+    assert probs[~kept].max(initial=0.0) < 1e-12   # dropped mass is gone
+    raw = np.asarray(jax.nn.softmax(row[0]))
+    np.testing.assert_allclose(probs[kept], raw[kept] / raw[kept].sum(),
+                               rtol=1e-5)
+
+
+# ===========================================================================
+# sample(): greedy limit, reproducibility, jit parity
+# ===========================================================================
+
+def test_greedy_is_temperature_zero_limit():
+    """As temperature -> 0 the sampled token converges to argmax, and
+    temperature <= 0 IS the argmax path (key ignored)."""
+    logits = jnp.asarray(_rows(3, (5, 32)))
+    key = jax.random.PRNGKey(0)
+    greedy = sample(logits, temperature=0.0)
+    assert greedy.shape == (5,)
+    np.testing.assert_array_equal(np.asarray(greedy),
+                                  np.asarray(jnp.argmax(logits, -1)))
+    cold = sample(logits, key, temperature=1e-4)
+    np.testing.assert_array_equal(np.asarray(cold), np.asarray(greedy))
+
+
+def test_sample_fixed_seed_reproducible_and_jit_identical():
+    logits = jnp.asarray(_rows(4, (6, 64)))
+    key = jax.random.PRNGKey(42)
+    kw = dict(temperature=0.9, top_k=10, top_p=0.9)
+    eager1 = sample(logits, key, **kw)
+    eager2 = sample(logits, key, **kw)
+    jitted = jax.jit(lambda l, k: sample(l, k, **kw))(logits, key)
+    np.testing.assert_array_equal(np.asarray(eager1), np.asarray(eager2))
+    np.testing.assert_array_equal(np.asarray(eager1), np.asarray(jitted))
+
+
+def test_sample_respects_filters():
+    """Sampled tokens always come from the filtered support."""
+    logits = jnp.asarray(_rows(5, (8, 32)))
+    for seed in range(5):
+        toks = np.asarray(sample(logits, jax.random.PRNGKey(seed),
+                                 temperature=1.5, top_k=4))
+        filt = np.asarray(apply_top_k(logits, 4))
+        for b, t in enumerate(toks):
+            assert filt[b, t] > NEG_INF / 2
+
+
+def test_sample_chain_per_position_independent():
+    """sample_chain: (K, S, V) -> (K, S), fixed-seed reproducible, each
+    position in the filtered support, greedy at temperature 0."""
+    logits = jnp.asarray(_rows(6, (3, 5, 16)))
+    key = jax.random.PRNGKey(1)
+    kw = dict(temperature=1.0, top_k=6, top_p=0.95)
+    t1 = np.asarray(sample_chain(logits, key, **kw))
+    t2 = np.asarray(sample_chain(logits, key, **kw))
+    assert t1.shape == (3, 5)
+    np.testing.assert_array_equal(t1, t2)
+    g = np.asarray(sample_chain(logits, key, temperature=0.0))
+    np.testing.assert_array_equal(g, np.asarray(jnp.argmax(logits, -1)))
+
+
+# ===========================================================================
+# speculative acceptance
+# ===========================================================================
+
+def _accept_oracle(target, draft, m):
+    """Python reference: longest matching prefix, then the target's own
+    token at the first mismatch (the bonus)."""
+    n = 0
+    while n < m and target[n] == draft[n + 1]:
+        n += 1
+    return n, target[n]
+
+
+def test_speculative_accept_matches_oracle():
+    rng = np.random.default_rng(7)
+    K, S = 16, 6
+    target = rng.integers(0, 4, size=(K, S)).astype(np.int32)
+    draft = rng.integers(0, 4, size=(K, S)).astype(np.int32)
+    lens = rng.integers(0, S, size=(K,)).astype(np.int32)
+    n_acc, bonus = speculative_accept(jnp.asarray(target),
+                                      jnp.asarray(draft),
+                                      jnp.asarray(lens))
+    for r in range(K):
+        n, b = _accept_oracle(target[r], draft[r], int(lens[r]))
+        assert int(n_acc[r]) == n
+        assert int(bonus[r]) == b
+        assert 0 <= n <= int(lens[r])
+
+
+def test_speculative_accept_full_and_zero():
+    # full acceptance: draft[1:] echoes target -> n_acc = m, bonus is the
+    # target's token one past the chain
+    target = jnp.asarray([[7, 8, 9, 1]], jnp.int32)
+    draft = jnp.asarray([[5, 7, 8, 9]], jnp.int32)   # [pending, d1..d3]
+    n, b = speculative_accept(target, draft, jnp.asarray([3]))
+    assert int(n[0]) == 3 and int(b[0]) == 1
+    # zero acceptance: first draft token wrong -> bonus = target[0]
+    draft0 = jnp.asarray([[5, 0, 8, 9]], jnp.int32)
+    n, b = speculative_accept(target, draft0, jnp.asarray([3]))
+    assert int(n[0]) == 0 and int(b[0]) == 7
+    # m = 0 (no draft): plain decode - bonus is target[0]
+    n, b = speculative_accept(target, draft, jnp.asarray([0]))
+    assert int(n[0]) == 0 and int(b[0]) == 7
+
+
+# ===========================================================================
+# hypothesis layer (randomized versions of the same properties)
+# ===========================================================================
+
+if HAVE_HYP:
+    finite_rows = st.integers(0, 2**31 - 1).map(
+        lambda s: _rows(s, (3, 24)))
+
+    @given(finite_rows, st.integers(-2, 30))
+    def test_hyp_top_k_support(rows, k):
+        _check_top_k(rows, k)
+
+    @given(finite_rows, st.floats(0.05, 1.0))
+    def test_hyp_top_p_support(rows, p):
+        _check_top_p(rows, p)
+
+    @given(finite_rows, st.integers(0, 2**31 - 1))
+    def test_hyp_greedy_limit(rows, seed):
+        logits = jnp.asarray(rows)
+        cold = sample(logits, jax.random.PRNGKey(seed), temperature=1e-4)
+        np.testing.assert_array_equal(np.asarray(cold),
+                                      np.asarray(jnp.argmax(logits, -1)))
+
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 8))
+    def test_hyp_accept_oracle(seed, S):
+        rng = np.random.default_rng(seed)
+        target = rng.integers(0, 3, size=(4, S)).astype(np.int32)
+        draft = rng.integers(0, 3, size=(4, S)).astype(np.int32)
+        lens = rng.integers(0, S, size=(4,)).astype(np.int32)
+        n_acc, bonus = speculative_accept(jnp.asarray(target),
+                                          jnp.asarray(draft),
+                                          jnp.asarray(lens))
+        for r in range(4):
+            n, b = _accept_oracle(target[r], draft[r], int(lens[r]))
+            assert (int(n_acc[r]), int(bonus[r])) == (n, b)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_hyp_sampling_properties():
+        pass

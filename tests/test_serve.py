@@ -7,6 +7,7 @@ from repro.configs.base import ServeConfig
 from repro.models import build_model
 from repro.serve.engine import ServeEngine
 from repro.serve.serve_step import make_serve_step, sample_token
+from traffic import mixed_prompts, serve_all
 
 
 @pytest.mark.parametrize("arch", ["granite-3-2b", "rwkv6-1.6b"])
@@ -14,13 +15,14 @@ def test_engine_continuous_batching(arch, rng):
     cfg = get_smoke_config(arch)
     m = build_model(cfg)
     params = m.init(rng)
-    eng = ServeEngine(m, params, ServeConfig(max_batch=2, max_seq=64,
-                                             max_new_tokens=4))
-    uids = [eng.submit([1, 2, 3]), eng.submit([4, 5]),
-            eng.submit([6, 7, 8, 9])]          # 3 requests, 2 slots
-    done = eng.run_until_done()
-    assert sorted(r.uid for r in done) == sorted(uids)
-    assert all(len(r.out_tokens) == 4 for r in done)
+    # 3 mixed-length requests through 2 slots: the third waits for a slot
+    prompts = mixed_prompts(cfg.vocab_size, lens=(3, 2, 4))
+    out, eng = serve_all(m, params,
+                         ServeConfig(max_batch=2, max_seq=64,
+                                     max_new_tokens=4),
+                         prompts, check=True)
+    assert len(out) == len(prompts)
+    assert all(len(toks) == 4 for toks in out.values())
 
 
 def test_greedy_decode_deterministic(rng):

@@ -11,6 +11,7 @@ from repro.models import build_model
 from repro.serve import OutOfPages, PageAllocator, ServeEngine
 from repro.serve.paged_cache import (dense_kv_bytes, paged_kv_bytes,
                                      pages_needed)
+from traffic import mixed_prompts, serve_all
 
 
 def _paged_from_dense(kc, vc, page_size, seed=0):
@@ -76,13 +77,10 @@ def test_engine_paged_matches_dense(arch, rng):
     cfg = get_smoke_config(arch).replace(dtype="float32")
     m = build_model(cfg)
     params = m.init(rng)
-    prompts = [[1, 2, 3], [4, 5], [6, 7, 8, 9], list(range(10, 28)), [3, 1]]
+    prompts = mixed_prompts(cfg.vocab_size, lens=(3, 2, 4, 18, 2))
 
     def run(scfg):
-        eng = ServeEngine(m, params, scfg)
-        for p in prompts:
-            eng.submit(p)
-        return {r.uid: r.out_tokens for r in eng.run_until_done()}, eng
+        return serve_all(m, params, scfg, prompts, check=True)
 
     dense_out, _ = run(ServeConfig(max_batch=2, max_seq=64, max_new_tokens=5))
     paged_out, eng = run(ServeConfig(max_batch=2, max_seq=64,
@@ -146,13 +144,14 @@ def test_engine_backpressure_out_of_pages(rng):
     params = m.init(rng)
     # each request: 8-token prompt + 4 new = 2 pages of 8; pool of 3 usable
     # pages fits ONE request at a time (2 pages) but never two
-    eng = ServeEngine(m, params,
-                      ServeConfig(max_batch=2, max_seq=64, max_new_tokens=4,
-                                  paged=True, page_size=8, num_pages=4))
-    uids = [eng.submit(list(range(1, 9))) for _ in range(3)]
-    done = eng.run_until_done()
-    assert sorted(r.uid for r in done) == sorted(uids)
-    assert all(len(r.out_tokens) == 4 for r in done)
+    prompts = mixed_prompts(cfg.vocab_size, lens=(8, 8, 8))
+    out, eng = serve_all(m, params,
+                         ServeConfig(max_batch=2, max_seq=64,
+                                     max_new_tokens=4, paged=True,
+                                     page_size=8, num_pages=4),
+                         prompts, check=True)
+    assert len(out) == 3
+    assert all(len(toks) == 4 for toks in out.values())
     assert eng.peak_pages <= 3
     assert eng.allocator.used_pages == 0
 
