@@ -62,8 +62,19 @@ bit-identical to the same trace served uncapped.
 
 Output: CSV rows per mode; --json additionally writes the full metrics
 dict (CI uploads it as a workflow artifact).
+
+--emit-trace PATH / --emit-metrics PATH (any mode, composable with the
+flags above) write the engine-telemetry artifacts from the LAST engine
+the selected mode ran - the interesting one in every comparison (paged,
+prefix-on, chunked-batched, spec-on, preempted): a Chrome trace-event
+JSON openable in Perfetto (docs/observability.md) and a metrics snapshot
++ per-launch-kind data-movement breakdown (HBM/SRAM bytes, energy,
+padding overhead).  The emitted per-launch KV-page counts are asserted
+to match the engine's PageAllocator-derived accounting before the file
+is written.
 """
 import argparse
+import dataclasses
 import json
 import sys
 import time
@@ -80,9 +91,53 @@ from repro.models import build_model
 from repro.serve import dense_kv_bytes, paged_kv_bytes, pages_needed
 from repro.serve.engine import ServeEngine
 
+# --emit-trace / --emit-metrics plumbing: every mode builds engines
+# through make_engine, which turns span tracing on when a trace was
+# requested and remembers the most recent engine so emit_artifacts can
+# export from the mode's final (always the telemetry-interesting) run
+_EMIT = {"trace": "", "metrics": "", "eng": None}
+
+
+def make_engine(model, params, scfg):
+    if _EMIT["trace"]:
+        scfg = dataclasses.replace(scfg, telemetry=True)
+    eng = ServeEngine(model, params, scfg)
+    _EMIT["eng"] = eng
+    return eng
+
+
+def emit_artifacts():
+    eng = _EMIT["eng"]
+    if eng is None:
+        return
+    if _EMIT["trace"]:
+        eng.export_trace(_EMIT["trace"])
+        print(f"# wrote {_EMIT['trace']} (open in Perfetto / "
+              f"chrome://tracing)")
+    if _EMIT["metrics"]:
+        movement = eng.movement_stats()
+        recs = eng.launch_records()
+        # the attribution must agree with the allocator: per-launch page
+        # counts come from block-table rows, the legacy counter from the
+        # analytic ceil - both sides of the same accounting
+        pages_rec = sum(r.kv_pages_read for r in recs
+                        if r.kind in ("decode", "spec_verify"))
+        assert pages_rec == eng.kv_pages_read, \
+            f"launch-record KV pages {pages_rec} != engine counter " \
+            f"{eng.kv_pages_read}"
+        Path(_EMIT["metrics"]).write_text(json.dumps(
+            {"metrics": eng.metrics_snapshot(), "movement": movement,
+             "launches": len(recs)}, indent=2))
+        tot = movement.get("total", {})
+        print(f"# wrote {_EMIT['metrics']}: launches={len(recs)} "
+              f"hbm={tot.get('hbm_bytes', 0):.3e}B "
+              f"sram={tot.get('sram_bytes', 0):.3e}B "
+              f"energy={tot.get('energy_j', 0):.3e}J "
+              f"padding_overhead={tot.get('padding_overhead', 0):.3f}")
+
 
 def run_mode(model, params, scfg, prompts, max_new):
-    eng = ServeEngine(model, params, scfg)
+    eng = make_engine(model, params, scfg)
     t0 = time.time()
     for p in prompts:
         eng.submit(p, max_new_tokens=max_new)
@@ -119,7 +174,7 @@ def run_latency_mode(model, params, scfg, arrivals, max_new, short_len):
     """Serve a timed-arrival trace and report latency stats: p50/p95 TTFT,
     time-between-tokens, and per-token tick-work stalls (deterministic
     bubble sizes - see docs/scheduling.md), wall-clock and work-clock."""
-    eng = ServeEngine(model, params, scfg)
+    eng = make_engine(model, params, scfg)
     pending = list(arrivals)
     uids_short = []
     t0 = time.time()
@@ -296,7 +351,7 @@ def make_prefix_trace(rng, vocab, groups, followers, shared_len, tail_len):
 
 
 def run_prefix_mode(model, params, scfg, warm, follow, max_new):
-    eng = ServeEngine(model, params, scfg)
+    eng = make_engine(model, params, scfg)
     out = {}
     t0 = time.time()
     # warmups run to completion first so their prompt pages are published
@@ -418,10 +473,11 @@ def run_spec_trace(args, out_json):
     print(f"# arch={cfg.name} shared={shared_len} tails={tails} "
           f"max_new={max_new} spec_k={args.spec_k}")
     print("mode,requests,tokens,seconds,tok_per_s,ticks,launches,"
-          "tokens_per_launch,tokens_per_kv_page,accept_rate")
+          "tokens_per_launch,tokens_per_kv_page,drafted,accepted,"
+          "rejected,accept_rate,chain_accept_mean")
     rows, outs = {}, {}
     for mode, spec in (("spec_off", False), ("spec_on", True)):
-        eng = ServeEngine(model, params,
+        eng = make_engine(model, params,
                           ServeConfig(speculative=spec, **base))
         t0 = time.time()
         for p in prompts:
@@ -438,13 +494,15 @@ def run_spec_trace(args, out_json):
         rows[mode].update({k: st[k] for k in (
             "ticks", "jit_calls", "decode_launches", "kv_pages_read",
             "tokens_per_launch", "tokens_per_kv_page", "spec_drafted",
-            "spec_accepted", "spec_acceptance_rate", "host_syncs",
-            "compile_count")})
+            "spec_accepted", "spec_rejected", "spec_acceptance_rate",
+            "spec_chain_accept_mean", "host_syncs", "compile_count")})
         r = rows[mode]
         print(f"{mode},{r['requests']},{r['tokens']},{r['seconds']:.2f},"
               f"{r['tok_per_s']:.1f},{r['ticks']},{r['decode_launches']},"
               f"{r['tokens_per_launch']:.2f},{r['tokens_per_kv_page']:.4f},"
-              f"{r['spec_acceptance_rate']:.2f}")
+              f"{r['spec_drafted']},{r['spec_accepted']},"
+              f"{r['spec_rejected']},{r['spec_acceptance_rate']:.2f},"
+              f"{r['spec_chain_accept_mean']:.2f}")
 
     off, on = rows["spec_off"], rows["spec_on"]
     launch_ratio = on["tokens_per_launch"] / max(off["tokens_per_launch"],
@@ -455,7 +513,10 @@ def run_spec_trace(args, out_json):
           f"{off['tokens_per_launch']:.2f} ({launch_ratio:.2f}x), "
           f"tokens/KV-page {on['tokens_per_kv_page']:.4f} vs "
           f"{off['tokens_per_kv_page']:.4f} ({page_ratio:.2f}x), "
-          f"acceptance {on['spec_acceptance_rate']:.2f}")
+          f"acceptance {on['spec_acceptance_rate']:.2f} "
+          f"(drafted {on['spec_drafted']} accepted {on['spec_accepted']} "
+          f"rejected {on['spec_rejected']}, per-chain mean "
+          f"{on['spec_chain_accept_mean']:.2f})")
     assert outs["spec_on"] == outs["spec_off"], \
         "speculative decoding changed greedy outputs"
     assert on["work_tokens"] == off["work_tokens"], \
@@ -481,7 +542,7 @@ def run_spec_trace(args, out_json):
 
 def run_preempt_replay(model, params, scfg, arrivals):
     """Serve a timed-arrival (tick, prompt, max_new, priority) trace."""
-    eng = ServeEngine(model, params, scfg)
+    eng = make_engine(model, params, scfg)
     pending = list(arrivals)
     tick, done = 0, []
     t0 = time.time()
@@ -608,6 +669,58 @@ def run_preempt_trace(args, out_json):
     return rows
 
 
+def run_default_trace(args, out_json):
+    """Mixed-length trace through the dense vs the paged engine."""
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            size=args.lens[i % len(args.lens)]).tolist()
+               for i in range(args.requests)]
+
+    num_pages = args.num_pages
+    if num_pages == 0:
+        # size the pool to the trace: the longest request fully resident on
+        # every slot would be dense-equivalent; halving it is what paging
+        # buys on a mixed trace (short requests hold few pages)
+        per_req = pages_needed(max(args.lens) + args.max_new, args.page_size)
+        num_pages = max(args.max_batch * per_req // 2,
+                        2 * per_req) + 1
+
+    dense_cfg = ServeConfig(max_batch=args.max_batch, max_seq=args.max_seq,
+                            max_new_tokens=args.max_new)
+    paged_cfg = ServeConfig(max_batch=args.max_batch, max_seq=args.max_seq,
+                            max_new_tokens=args.max_new, paged=True,
+                            page_size=args.page_size, num_pages=num_pages)
+
+    print(f"# arch={cfg.name} max_batch={args.max_batch} "
+          f"max_seq={args.max_seq} lens={args.lens} "
+          f"requests={args.requests} max_new={args.max_new}")
+    print(f"# capacity math: dense {dense_kv_bytes(cfg, dense_cfg)} B, "
+          f"paged pool {paged_kv_bytes(cfg, paged_cfg, num_pages)} B "
+          f"({num_pages} pages x {args.page_size} tok)")
+    print("mode,requests,tokens,seconds,tok_per_s,kv_bytes,"
+          "peak_pages,pool_pages")
+    rows = {}
+    for mode, scfg in (("dense", dense_cfg), ("paged", paged_cfg)):
+        r = run_mode(model, params, scfg, prompts, args.max_new)
+        rows[mode] = r
+        print(f"{mode},{r['requests']},{r['tokens']},{r['seconds']:.2f},"
+              f"{r['tok_per_s']:.1f},{r['kv_bytes']},{r['peak_pages']},"
+              f"{r['pool_pages']}")
+    saved = 1 - rows["paged"]["kv_bytes"] / rows["dense"]["kv_bytes"]
+    print(f"# paged peak KV bytes {rows['paged']['kv_bytes']} "
+          f"vs dense {rows['dense']['kv_bytes']} "
+          f"({saved:.0%} smaller)")
+    assert rows["paged"]["kv_bytes"] < rows["dense"]["kv_bytes"], \
+        "paged pool must be strictly smaller than the dense cache"
+    if out_json:
+        Path(out_json).write_text(json.dumps(rows, indent=2))
+        print(f"# wrote {out_json}")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b")
@@ -665,6 +778,14 @@ def main(argv=None):
     ap.add_argument("--tail-len", type=int, default=64)
     ap.add_argument("--json", default="",
                     help="also write the metrics dict to this path")
+    ap.add_argument("--emit-trace", default="",
+                    help="write a Chrome trace-event JSON (open in "
+                         "Perfetto) of the mode's final engine run; "
+                         "enables ServeConfig.telemetry for the run")
+    ap.add_argument("--emit-metrics", default="",
+                    help="write the final engine's metrics snapshot + "
+                         "per-launch-kind data-movement breakdown "
+                         "(HBM/SRAM bytes, energy) to this path")
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized run (max_seq=512, lens 64/128/448)")
     args = ap.parse_args(argv)
@@ -674,62 +795,20 @@ def main(argv=None):
         args.shared_len, args.tail_len = 128, 32
         args.prefill_chunk = 64
 
+    _EMIT["trace"], _EMIT["metrics"] = args.emit_trace, args.emit_metrics
+    _EMIT["eng"] = None
+
     if args.prefix_trace:
-        return run_prefix_trace(args, args.json)
-    if args.chunked:
-        return run_chunked_trace(args, args.json)
-    if args.speculative:
-        return run_spec_trace(args, args.json)
-    if args.preempt_trace:
-        return run_preempt_trace(args, args.json)
-
-    cfg = get_smoke_config(args.arch)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
-    prompts = [rng.integers(1, cfg.vocab_size,
-                            size=args.lens[i % len(args.lens)]).tolist()
-               for i in range(args.requests)]
-
-    num_pages = args.num_pages
-    if num_pages == 0:
-        # size the pool to the trace: the longest request fully resident on
-        # every slot would be dense-equivalent; halving it is what paging
-        # buys on a mixed trace (short requests hold few pages)
-        per_req = pages_needed(max(args.lens) + args.max_new, args.page_size)
-        num_pages = max(args.max_batch * per_req // 2,
-                        2 * per_req) + 1
-
-    dense_cfg = ServeConfig(max_batch=args.max_batch, max_seq=args.max_seq,
-                            max_new_tokens=args.max_new)
-    paged_cfg = ServeConfig(max_batch=args.max_batch, max_seq=args.max_seq,
-                            max_new_tokens=args.max_new, paged=True,
-                            page_size=args.page_size, num_pages=num_pages)
-
-    print(f"# arch={cfg.name} max_batch={args.max_batch} "
-          f"max_seq={args.max_seq} lens={args.lens} "
-          f"requests={args.requests} max_new={args.max_new}")
-    print(f"# capacity math: dense {dense_kv_bytes(cfg, dense_cfg)} B, "
-          f"paged pool {paged_kv_bytes(cfg, paged_cfg, num_pages)} B "
-          f"({num_pages} pages x {args.page_size} tok)")
-    print("mode,requests,tokens,seconds,tok_per_s,kv_bytes,"
-          "peak_pages,pool_pages")
-    rows = {}
-    for mode, scfg in (("dense", dense_cfg), ("paged", paged_cfg)):
-        r = run_mode(model, params, scfg, prompts, args.max_new)
-        rows[mode] = r
-        print(f"{mode},{r['requests']},{r['tokens']},{r['seconds']:.2f},"
-              f"{r['tok_per_s']:.1f},{r['kv_bytes']},{r['peak_pages']},"
-              f"{r['pool_pages']}")
-    saved = 1 - rows["paged"]["kv_bytes"] / rows["dense"]["kv_bytes"]
-    print(f"# paged peak KV bytes {rows['paged']['kv_bytes']} "
-          f"vs dense {rows['dense']['kv_bytes']} "
-          f"({saved:.0%} smaller)")
-    assert rows["paged"]["kv_bytes"] < rows["dense"]["kv_bytes"], \
-        "paged pool must be strictly smaller than the dense cache"
-    if args.json:
-        Path(args.json).write_text(json.dumps(rows, indent=2))
-        print(f"# wrote {args.json}")
+        rows = run_prefix_trace(args, args.json)
+    elif args.chunked:
+        rows = run_chunked_trace(args, args.json)
+    elif args.speculative:
+        rows = run_spec_trace(args, args.json)
+    elif args.preempt_trace:
+        rows = run_preempt_trace(args, args.json)
+    else:
+        rows = run_default_trace(args, args.json)
+    emit_artifacts()
     return rows
 
 

@@ -298,6 +298,18 @@ class ServeConfig:
     # admission would otherwise run out of pages)
     prefix_evict_watermark: float = 0.0
 
+    # --- telemetry (serve/telemetry.py) -------------------------------------
+    # The metrics registry is ALWAYS on - it is the typed backing store of
+    # engine.stats() / scheduler.stats() and costs a handful of host-side
+    # counter writes per tick.  telemetry=True additionally turns on the
+    # SPAN TRACER: per-request lifecycle spans and per-tick engine/launch
+    # spans in a bounded ring buffer (telemetry_spans records), exportable
+    # as Chrome trace-event JSON via engine.export_trace() for Perfetto.
+    # Tracing is host-side only: it adds zero jitted calls and zero
+    # device->host syncs, and outputs stay bit-identical either way.
+    telemetry: bool = False
+    telemetry_spans: int = 65536
+
     def validate(self) -> "ServeConfig":
         """Scheduler-level config validation (called by ServeEngine).
 
@@ -363,6 +375,9 @@ class ServeConfig:
             if self.spec_ngram < 1:
                 raise ValueError(f"spec_ngram must be >= 1, "
                                  f"got {self.spec_ngram}")
+        if self.telemetry_spans < 1:
+            raise ValueError(f"telemetry_spans must be >= 1, "
+                             f"got {self.telemetry_spans}")
         if self.preemption and not self.chunked:
             raise ValueError("preemption requires chunked=True (a preempted "
                              "request resumes through the chunked prefill "

@@ -13,14 +13,21 @@ from .serve_step import (make_chunk_batch_step, make_chunk_prefill_step,
                          make_prefill_step, make_serve_step,
                          make_spec_verify_step, make_suffix_prefill_step,
                          sample_token)
+from .telemetry import (Counter, Gauge, Histogram, LaunchRecord,
+                        MetricError, MetricsRegistry, Span, SpanTracer,
+                        Telemetry, TickRecord, TraceEvent,
+                        export_chrome_trace, movement_breakdown)
 
-__all__ = ["ChunkBatch", "ChunkTask", "DraftTask", "OutOfPages",
-           "PageAllocator", "RadixPrefixCache", "Request", "RequestState",
-           "ServeEngine", "SpecBatch", "TokenBudgetScheduler",
+__all__ = ["ChunkBatch", "ChunkTask", "Counter", "DraftTask", "Gauge",
+           "Histogram", "LaunchRecord", "MetricError", "MetricsRegistry",
+           "OutOfPages", "PageAllocator", "RadixPrefixCache", "Request",
+           "RequestState", "ServeEngine", "Span", "SpanTracer", "SpecBatch",
+           "Telemetry", "TickRecord", "TokenBudgetScheduler", "TraceEvent",
            "apply_top_k", "apply_top_p", "bucket_rows", "dense_kv_bytes",
-           "make_chunk_batch_step", "make_chunk_prefill_step",
-           "make_fused_decode_step", "make_paged_prefill_step",
-           "make_prefill_step", "make_serve_step", "make_spec_verify_step",
-           "make_suffix_prefill_step", "ngram_draft", "paged_kv_bytes",
+           "export_chrome_trace", "make_chunk_batch_step",
+           "make_chunk_prefill_step", "make_fused_decode_step",
+           "make_paged_prefill_step", "make_prefill_step", "make_serve_step",
+           "make_spec_verify_step", "make_suffix_prefill_step",
+           "movement_breakdown", "ngram_draft", "paged_kv_bytes",
            "pages_needed", "sample", "sample_chain", "sample_token",
            "speculative_accept"]

@@ -116,6 +116,9 @@ from .serve_step import (make_chunk_batch_step, make_chunk_prefill_step,
                          make_fused_decode_step, make_paged_prefill_step,
                          make_prefill_step, make_serve_step,
                          make_spec_verify_step, sample_token)
+from .telemetry import (TRACK_ENGINE, TRACK_QUEUE, LaunchRecord,
+                        MetricsRegistry, SpanTracer, Telemetry, TickRecord,
+                        export_chrome_trace, movement_breakdown)
 
 # attention-family prompts are padded to a multiple of this before the
 # batched prefill, bounding jit recompiles to one per bucket
@@ -193,6 +196,30 @@ def _shared_steps(model: Model, temperature: float, top_k: int = 0,
     return steps
 
 
+def _registry_counter(name: str):
+    """Class-level compatibility view over a registry counter (the engine
+    analogue of the scheduler's): reads and `self.x += n` writes on the
+    old attribute names go through the MetricsRegistry, so the registry is
+    the one source of truth while every call site keeps its spelling."""
+    def fget(self):
+        return int(self.tm.registry.get(name).value)
+
+    def fset(self, v):
+        self.tm.registry.get(name).set_total(v)
+
+    return property(fget, fset)
+
+
+def _registry_gauge(name: str):
+    def fget(self):
+        return int(self.tm.registry.get(name).value)
+
+    def fset(self, v):
+        self.tm.registry.get(name).set(v)
+
+    return property(fget, fset)
+
+
 class ServeEngine:
     def __init__(self, model: Model, params, scfg: ServeConfig):
         self.model = model
@@ -207,6 +234,40 @@ class ServeEngine:
         if self.speculative and model.verify_chunks is None:
             raise ValueError(f"speculative serving needs an attention "
                              f"family, got {cfg.family}")
+        # telemetry FIRST: one metrics registry per engine (the typed
+        # backing store of every counter below - the scheduler, allocator,
+        # and prefix cache all register into it), plus the optional span
+        # tracer (ServeConfig.telemetry; host-side only - zero jitted
+        # calls, zero device->host syncs, bit-identical outputs on or off)
+        tracer = SpanTracer(scfg.telemetry_spans) if scfg.telemetry else None
+        self.tm = Telemetry(registry=MetricsRegistry(), tracer=tracer)
+        m = self.tm.registry
+        m.counter("serve_jit_calls_total",
+                  "Jitted model-step launches dispatched")
+        m.counter("serve_host_syncs_total",
+                  "Device->host transfers (token fetches and admission "
+                  "samples)")
+        m.counter("serve_prefill_tokens_total",
+                  "Prompt tokens actually computed by prefill")
+        m.counter("serve_prefix_hit_tokens_total",
+                  "Prompt tokens served from the prefix cache instead of "
+                  "being recomputed")
+        m.counter("serve_cow_copies_total",
+                  "Device-side copy-on-write page copies")
+        m.counter("serve_gen_tokens_total", "Generation tokens emitted")
+        m.counter("serve_decode_launches_total",
+                  "Token-emitting launches (fused decode + spec verify)")
+        m.counter("serve_kv_pages_read_total",
+                  "KV pages read by token-emitting launches (analytic "
+                  "host-side count, not a device counter)")
+        m.counter("serve_requests_submitted_total",
+                  "Requests accepted by submit()")
+        m.counter("serve_requests_finished_total",
+                  "Requests finished (length or stop token)")
+        m.gauge("serve_peak_pages",
+                "High-water mark of pool pages in use (cached included)")
+        m.gauge("serve_peak_live_pages",
+                "High-water mark of distinct pages referenced by slots")
         self.prefix: Optional[RadixPrefixCache] = None
         if scfg.prefix_cache and not scfg.paged:
             raise ValueError("prefix_cache requires paged=True")
@@ -223,27 +284,23 @@ class ServeEngine:
             num_pages = scfg.pool_pages()
             self.allocator = PageAllocator(num_pages, scfg.page_size, B,
                                            scfg.max_seq,
-                                           usable_pages=scfg.usable_pages)
+                                           usable_pages=scfg.usable_pages,
+                                           metrics=m)
             self.cache = model.init_cache(B, scfg.max_seq,
                                           page_size=scfg.page_size,
                                           num_pages=num_pages)
             if scfg.prefix_cache:
                 self.prefix = RadixPrefixCache(self.allocator,
-                                               scfg.page_size)
+                                               scfg.page_size, metrics=m)
+                self.prefix.event_cb = self._prefix_event
         else:
             self.allocator = None
             self.cache = model.init_cache(B, scfg.max_seq,
                                           enc_len=scfg.max_seq)
-        # metrics (all modes; prefix_* stay 0 without the prefix cache)
-        self.peak_pages = 0          # pool pages in use, incl. cached
-        self.peak_live_pages = 0     # distinct pages referenced by slots
-        self.prefill_tokens = 0      # prompt tokens actually computed
-        self.prefix_hit_tokens = 0   # prompt tokens served from the cache
-        self.cow_copies = 0          # copy-on-write page copies
         self.lens = jnp.zeros((B,), jnp.int32)
         self.slots: List[Optional[Request]] = [None] * B
         self.tokens = jnp.zeros((B, 1), jnp.int32)
-        self.sched = TokenBudgetScheduler(scfg)
+        self.sched = TokenBudgetScheduler(scfg, metrics=m)
         self._uid = 0
         self._admit_seq = 0          # monotone admission stamp (victim order)
         self._key = jax.random.PRNGKey(scfg.seed)
@@ -254,20 +311,11 @@ class ServeEngine:
         # lengths (COW guard, bookkeeping) reads this instead of syncing
         # the device array - lengths are fully determined by scheduling
         self._lens_np = np.zeros((B,), np.int64)
-        # dispatch accounting: jitted model-step launches and device->host
-        # transfers, total and per tick (launch_log rows:
-        # (jit_calls, host_syncs, host_wall_s, n_chunk_tasks, n_decode))
-        self.jit_calls = 0
-        self.host_syncs = 0
-        self.launch_log: List[tuple] = []
-        # generation throughput accounting (the speculative speedup
-        # metrics): emitted generation tokens, launches that emit them
-        # (fused decode + spec verify), and KV pages each of those
-        # launches read (host-side ceil(lens / page_size) sums - an
-        # analytic traffic model, not a device counter)
-        self.gen_tokens = 0
-        self.decode_launches = 0
-        self.kv_pages_read = 0
+        # dispatch / throughput counters (jit_calls, host_syncs,
+        # gen_tokens, decode_launches, kv_pages_read, ...) live in the
+        # telemetry registry; the attribute names below the class body are
+        # registry-backed properties, and launch_log is a view over the
+        # typed per-tick records in self.tm.ticks
         # n_acc array of the tick's verify launch, fetched WITH tokens
         self._spec_nacc: Optional[jax.Array] = None
 
@@ -286,6 +334,113 @@ class ServeEngine:
             self._prefill_chunks = steps["prefill_chunks"]
         if self.speculative:
             self._spec_verify = steps["spec_verify"]
+
+    # registry-backed compatibility views (one source of truth: the
+    # telemetry registry; `eng.jit_calls += 1` et al. keep working)
+    jit_calls = _registry_counter("serve_jit_calls_total")
+    host_syncs = _registry_counter("serve_host_syncs_total")
+    prefill_tokens = _registry_counter("serve_prefill_tokens_total")
+    prefix_hit_tokens = _registry_counter("serve_prefix_hit_tokens_total")
+    cow_copies = _registry_counter("serve_cow_copies_total")
+    gen_tokens = _registry_counter("serve_gen_tokens_total")
+    decode_launches = _registry_counter("serve_decode_launches_total")
+    kv_pages_read = _registry_counter("serve_kv_pages_read_total")
+    peak_pages = _registry_gauge("serve_peak_pages")
+    peak_live_pages = _registry_gauge("serve_peak_live_pages")
+
+    @property
+    def launch_log(self) -> List[tuple]:
+        """Per-tick dispatch accounting as the legacy 5-tuple rows
+        (jit_calls, host_syncs, host_wall_s, n_chunk_tasks, n_decode) -
+        a compatibility view over the typed TickRecords in self.tm.ticks."""
+        return [t.as_tuple() for t in self.tm.ticks]
+
+    # ------------------------------------------------------------------
+    # telemetry surface
+    # ------------------------------------------------------------------
+    def export_trace(self, path, clock: str = "wall"):
+        """Write the span tracer's records as Chrome trace-event JSON
+        (open in Perfetto / chrome://tracing): request lifecycle spans on
+        per-slot tracks, engine phases and kernel launches on engine
+        tracks.  clock="wall" for the human view, "work" for the
+        deterministic work-clock view.  Returns the trace dict."""
+        if self.tm.tracer is None:
+            raise ValueError(
+                "span tracing is off: build the engine with "
+                "ServeConfig(telemetry=True) to record spans")
+        return export_chrome_trace(path, self.tm.tracer,
+                                   self.scfg.max_batch, clock=clock)
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """JSON-ready snapshot of every registered metric."""
+        return self.tm.registry.snapshot()
+
+    def prometheus_metrics(self) -> str:
+        """Every registered metric in Prometheus text exposition format."""
+        return self.tm.registry.prometheus_text()
+
+    def launch_records(self) -> List[LaunchRecord]:
+        """Per-launch data-movement attribution records, launch order."""
+        return list(self.tm.launches)
+
+    def movement_stats(self) -> Dict[str, Dict[str, float]]:
+        """Paper-style (Fig. 6) data-movement breakdown per launch kind:
+        estimated HBM / SRAM bytes and energy folded from the per-launch
+        records through core/energy.py (see telemetry.movement_breakdown)."""
+        return movement_breakdown(self.tm.launches, self.model.cfg,
+                                  self.scfg)
+
+    def _prefix_event(self, name: str, **args):
+        """Prefix-cache hit/publish/evict instants onto the engine track
+        (wired as RadixPrefixCache.event_cb; no-op with the tracer off)."""
+        tr = self.tm.tracer
+        if tr is not None:
+            tr.add_event(name, "prefix", TRACK_ENGINE, self.sched.ticks,
+                         self.sched.work_clock, tr.now(), **args)
+
+    def _note_launch(self, kind: str, rows: int, live_rows: int,
+                     true_tokens: int, padded_tokens: int,
+                     kv_pages_read: int, kv_pages_written: int,
+                     new_kv_tokens: int, wall0: float = 0.0,
+                     wall1: float = 0.0):
+        """Record one kernel launch's data-movement attribution (and, with
+        the tracer on, its span on the engine track)."""
+        self.tm.launch(LaunchRecord(
+            tick=self.sched.ticks, kind=kind, rows=rows,
+            live_rows=live_rows, true_tokens=true_tokens,
+            padded_tokens=padded_tokens, kv_pages_read=kv_pages_read,
+            kv_pages_written=kv_pages_written,
+            new_kv_tokens=new_kv_tokens,
+            work_clock=self.sched.work_clock), wall0, wall1)
+
+    def _row_pages(self, slot: int, true_len: int) -> int:
+        """KV pages slot's attention READS at KV length `true_len`:
+        counted from the allocator's block-table row (the PageAllocator's
+        accounting IS the source of truth - tests cross-check this count
+        against the analytic ceil(true_len / page_size))."""
+        n = -(-int(true_len) // self.scfg.page_size)
+        return int(np.count_nonzero(self.allocator.table[slot, :n]))
+
+    def _span_pages(self, start: int, end: int) -> int:
+        """Pages the K/V writes of token positions [start, end) touch."""
+        if end <= start:
+            return 0
+        ps = self.scfg.page_size
+        return end // ps - start // ps + (1 if end % ps else 0)
+
+    def _wall(self) -> float:
+        """Tracer wall stamp; 0.0 (never read) with the tracer off."""
+        tr = self.tm.tracer
+        return tr.now() if tr is not None else 0.0
+
+    def _phase(self, req: Request, phase: str, track: int, **args):
+        """Request-lifecycle phase transition onto the tracer (no-op off)."""
+        self.tm.request_phase(req.uid, phase, track, self.sched.ticks,
+                              self.sched.work_clock, **args)
+
+    def _event(self, req: Request, name: str, track: int, **args):
+        self.tm.request_event(req.uid, name, track, self.sched.ticks,
+                              self.sched.work_clock, **args)
 
     # ------------------------------------------------------------------
     @property
@@ -336,9 +491,12 @@ class ServeEngine:
         if self.scfg.eos_id is not None:
             stops = stops | {self.scfg.eos_id}
         self._uid += 1
-        self.sched.submit(Request(self._uid, list(prompt), n_new,
-                                  stop_tokens=stops,
-                                  priority=int(priority)))
+        req = Request(self._uid, list(prompt), n_new, stop_tokens=stops,
+                      priority=int(priority))
+        self.sched.submit(req)
+        self.tm.registry.get("serve_requests_submitted_total").inc()
+        self._phase(req, "QUEUED", TRACK_QUEUE,
+                    prompt_tokens=len(prompt), priority=int(priority))
         return self._uid
 
     def _free_slot(self) -> Optional[int]:
@@ -374,6 +532,7 @@ class ServeEngine:
         out["host_syncs"] = self.host_syncs
         out["compile_count"] = self.compile_cache_size()
         out["speculative"] = self.speculative
+        out["telemetry"] = self.tm.enabled
         out["gen_tokens"] = self.gen_tokens
         out["decode_launches"] = self.decode_launches
         out["kv_pages_read"] = self.kv_pages_read
@@ -516,6 +675,9 @@ class ServeEngine:
         if self.paged:
             self._table_dirty = True     # zero the slot's device row
         self.sched.note_finished(req)
+        self.tm.registry.get("serve_requests_finished_total").inc()
+        self._phase(req, "DONE", i, reason=req.finish_reason,
+                    out_tokens=len(req.out_tokens))
         self._finished_this_tick.append(req)
 
     def _sync_table(self):
@@ -579,6 +741,7 @@ class ServeEngine:
         req.prefill_pos = len(req.prompt)
         req.state = RequestState.DECODING
         self._stamp_admit(req)
+        self._phase(req, "DECODING", slot)
         if self._emit(req, nxt):
             self._finish(req)
 
@@ -586,12 +749,19 @@ class ServeEngine:
         """Dense cache, attention family: one batched prefill into a
         sub-cache sized to the padded prompt, scattered into the slot row."""
         self.sched.pop(req)
+        self._phase(req, "PREFILLING", slot)
         toks, s_real = self._padded_prompt(req.prompt, PREFILL_BUCKET)
         s_pad = toks.shape[1]
         sub = self.model.init_cache(1, s_pad)
         batch = {"tokens": toks, "true_lens": jnp.asarray([s_real])}
         self.jit_calls += 1
+        w0 = self._wall()
         logits, sub, _ = self._prefill(self.params, batch, sub)
+        self._note_launch("prefill", rows=1, live_rows=1,
+                          true_tokens=s_real, padded_tokens=s_pad,
+                          kv_pages_read=0, kv_pages_written=0,
+                          new_kv_tokens=s_real, wall0=w0,
+                          wall1=self._wall())
         self.cache["k"] = self.cache["k"].at[:, slot, :s_pad].set(
             sub["k"][:, 0])
         self.cache["v"] = self.cache["v"].at[:, slot, :s_pad].set(
@@ -636,6 +806,7 @@ class ServeEngine:
         if not self.allocator.can_alloc(need):
             return False
         self.sched.pop(req)
+        self._phase(req, "PREFILLING", slot)
         pages = self.allocator.alloc(slot, need)
         self._note_alloc()
         toks, s_real = self._padded_prompt(req.prompt, scfg.page_size)
@@ -644,8 +815,16 @@ class ServeEngine:
         self.cache["block_table"] = self.allocator.table_device()
         batch = {"tokens": toks, "true_lens": jnp.asarray([s_real])}
         self.jit_calls += 1
+        w0 = self._wall()
         logits, self.cache, _ = self._prefill_paged(
             self.params, batch, self.cache, page_ids)
+        self._note_launch("prefill_paged", rows=1, live_rows=1,
+                          true_tokens=s_real,
+                          padded_tokens=toks.shape[1],
+                          kv_pages_read=self._row_pages(slot, s_real),
+                          kv_pages_written=self._span_pages(0, s_real),
+                          new_kv_tokens=s_real, wall0=w0,
+                          wall1=self._wall())
         self.prefill_tokens += s_real
         self.sched.note_work(s_real)
         self._place(slot, req, logits, s_real)
@@ -708,6 +887,7 @@ class ServeEngine:
         req.prefill_pos = start
         req.state = RequestState.PREFILLING
         self._stamp_admit(req)
+        self._phase(req, "PREFILLING", slot, cached_tokens=start)
         # the decode step later this tick walks the slot's row on device
         self.cache["block_table"] = self.allocator.table_device()
         self._run_chunk(ChunkTask(req, slot, start,
@@ -718,9 +898,11 @@ class ServeEngine:
         """Token-by-token prefill through decode_step (exact for every
         architecture family, including recurrent state caches)."""
         self.sched.pop(req)
+        self._phase(req, "PREFILLING", slot)
         lens = self.lens
         cache = self.cache
         last_logits = None
+        w0 = self._wall()
         for t in req.prompt:
             tok = self.tokens.at[slot, 0].set(t)
             pos = lens
@@ -728,6 +910,13 @@ class ServeEngine:
             logits, cache = self._decode(self.params, cache, tok, pos)
             lens = lens.at[slot].add(1)
             last_logits = logits
+        # one aggregated record for the whole token-by-token sweep
+        self._note_launch("stepwise", rows=1, live_rows=1,
+                          true_tokens=len(req.prompt),
+                          padded_tokens=len(req.prompt),
+                          kv_pages_read=0, kv_pages_written=0,
+                          new_kv_tokens=len(req.prompt), wall0=w0,
+                          wall1=self._wall())
         self.cache, self.lens = cache, lens
         self._lens_np[slot] = len(req.prompt)
         self.prefill_tokens += len(req.prompt)
@@ -740,6 +929,7 @@ class ServeEngine:
         req.slot = slot
         req.prefill_pos = len(req.prompt)
         req.state = RequestState.DECODING
+        self._phase(req, "DECODING", slot)
         if self._emit(req, nxt):
             self._finish(req)
 
@@ -768,6 +958,7 @@ class ServeEngine:
         req.prefill_pos = start
         req.state = RequestState.PREFILLING
         self._stamp_admit(req)
+        self._phase(req, "PREFILLING", slot, cached_tokens=start)
         return True
 
     def _run_chunk(self, task: ChunkTask):
@@ -792,12 +983,19 @@ class ServeEngine:
                  "offset": jnp.asarray([start], jnp.int32),
                  "true_lens": jnp.asarray([start + n], jnp.int32)}
         self.jit_calls += 1
+        w0 = self._wall()
         logits, self.cache, _ = self._prefill_chunk(
             self.params, batch, self.cache, page_row)
         req.prefill_pos = start + n
         self.prefill_tokens += n
         self.sched.note_work(n)
         self.sched.chunks_run += 1
+        self._note_launch("chunk", rows=1, live_rows=1, true_tokens=n,
+                          padded_tokens=s_pad,
+                          kv_pages_read=self._row_pages(slot, start + n),
+                          kv_pages_written=self._span_pages(start,
+                                                            start + n),
+                          new_kv_tokens=n, wall0=w0, wall1=self._wall())
         if req.prefill_pos >= len(req.target):
             self.lens = self.lens.at[slot].set(len(req.target))
             self._lens_np[slot] = len(req.target)
@@ -805,6 +1003,7 @@ class ServeEngine:
             nxt = int(self._sample(logits)[0, 0])
             self.tokens = self.tokens.at[slot, 0].set(nxt)
             req.state = RequestState.DECODING
+            self._phase(req, "DECODING", slot)
             self._table_dirty = True     # unmask the slot's device row
             if self._emit(req, nxt):
                 self._finish(req)
@@ -831,6 +1030,7 @@ class ServeEngine:
             self.sched.chunks_run += 1
             if t.req.prefill_pos >= len(t.req.target):
                 t.req.state = RequestState.DECODING
+                self._phase(t.req, "DECODING", t.slot)
                 self._table_dirty = True     # unmask the slot's device row
                 self._lens_np[t.slot] = len(t.req.target)
                 finals.append((t.req, t.slot, self.sched.work_clock))
@@ -846,9 +1046,21 @@ class ServeEngine:
                  "final_slot": jnp.asarray(pack.final_slots)}
         self.jit_calls += 1
         self.sched.packs_run += 1
+        w0 = self._wall()
         self.cache, self.tokens, self.lens = self._prefill_chunks(
             self.params, batch, self.cache, jnp.asarray(tables),
             self.tokens, self.lens, self._next_key())
+        n_true = sum(t.length for t in tasks)
+        self._note_launch(
+            "chunk_batch", rows=int(pack.tokens.shape[0]),
+            live_rows=len(tasks), true_tokens=n_true,
+            padded_tokens=int(pack.tokens.shape[0] * pack.tokens.shape[1]),
+            kv_pages_read=sum(self._row_pages(t.slot, t.start + t.length)
+                              for t in tasks),
+            kv_pages_written=sum(self._span_pages(t.start, t.start
+                                                  + t.length)
+                                 for t in tasks),
+            new_kv_tokens=n_true, wall0=w0, wall1=self._wall())
         return finals
 
     def _run_spec_verify(self, tasks: List[DraftTask]) -> SpecBatch:
@@ -881,10 +1093,23 @@ class ServeEngine:
         ps = self.scfg.page_size
         self.kv_pages_read += int(sum(-(-int(t) // ps)
                                       for t in pack.true_lens[live]))
+        w0 = self._wall()
         self.cache, self.tokens, self.lens, self._spec_nacc = \
             self._spec_verify(self.params, batch, self.cache,
                               jnp.asarray(tables), self.tokens, self.lens,
                               self._next_key())
+        n_q = sum(1 + len(t.draft) for t in pack.tasks)
+        self._note_launch(
+            "spec_verify", rows=int(pack.tokens.shape[0]),
+            live_rows=len(pack.tasks), true_tokens=n_q,
+            padded_tokens=int(pack.tokens.shape[0] * pack.tokens.shape[1]),
+            kv_pages_read=sum(self._row_pages(t.slot,
+                                              t.offset + 1 + len(t.draft))
+                              for t in pack.tasks),
+            kv_pages_written=sum(
+                self._span_pages(t.offset, t.offset + 1 + len(t.draft))
+                for t in pack.tasks),
+            new_kv_tokens=n_q, wall0=w0, wall1=self._wall())
         return pack
 
     # ------------------------------------------------------------------
@@ -949,6 +1174,9 @@ class ServeEngine:
         self.sched.pages_reclaimed += self.allocator.free_pages - free0
         self.sched.preemptions += 1
         victim.n_preemptions += 1
+        self._event(victim, "PREEMPT", slot,
+                    pages_reclaimed=self.allocator.free_pages - free0)
+        self._phase(victim, "RESUMING", TRACK_QUEUE)
         self.slots[slot] = None
         self.lens = self.lens.at[slot].set(0)
         self._lens_np[slot] = 0
@@ -1005,6 +1233,7 @@ class ServeEngine:
         is gone).  batched=False keeps one launch per chunk and per-slot
         emission: the sequential parity oracle."""
         w0 = self.sched.work_clock
+        wp0 = self._wall()
         # admission FIRST (it can preempt: a decoding victim shed here
         # must not join this tick's decode batch): reserve slots + pages
         # for as many queued requests as the policy head allows (no
@@ -1030,6 +1259,7 @@ class ServeEngine:
             if resuming:
                 self.sched.resumes += 1
                 req.n_resumes += 1
+                self._event(req, "RESUME", req.slot)
         if self._table_dirty:
             # a preemption zeroed a lane (or freed pages that admission
             # just re-allocated): the device table must mask it to the
@@ -1055,6 +1285,14 @@ class ServeEngine:
         budget = self.sched.prefill_budget(len(decode_slots) + spec_tokens)
         chunks = self.sched.plan_chunks(prefilling, budget)
         self._tick_profile = (len(chunks), len(decode_slots))
+        tr = self.tm.tracer
+        if tr is not None:
+            # the tick's host-side planning phase: admission (incl. any
+            # preemption), draft planning, and chunk planning
+            tr.add_span("plan", "tick", TRACK_ENGINE, self.sched.ticks,
+                        w0, self.sched.work_clock, wp0, tr.now(),
+                        n_chunks=len(chunks), n_decode=len(decode_slots),
+                        n_drafts=len(spec_tasks))
         finals = []
         if chunks:
             if self.scfg.batched:
@@ -1079,21 +1317,38 @@ class ServeEngine:
             self.kv_pages_read += sum(
                 -(-(int(self._lens_np[i]) + 1) // self.scfg.page_size)
                 for i in plain_slots)
+            pages_read = sum(self._row_pages(i, int(self._lens_np[i]) + 1)
+                             for i in plain_slots)
+            lw0 = self._wall()
             self.cache, self.tokens, self.lens = self._decode_fused(
                 self.params, self.cache, self.tokens, self.lens,
                 jnp.asarray(live), self._next_key())
+            self._note_launch("decode", rows=len(self.slots),
+                              live_rows=len(plain_slots),
+                              true_tokens=len(plain_slots),
+                              padded_tokens=len(self.slots),
+                              kv_pages_read=pages_read,
+                              kv_pages_written=len(plain_slots),
+                              new_kv_tokens=len(plain_slots), wall0=lw0,
+                              wall1=self._wall())
             self.sched.note_work(len(plain_slots))
             self._lens_np[plain_slots] += 1
         gen_work = len(plain_slots)
         if finals or plain_slots or spec_pack is not None:
             # THE device->host transfer: every sampled token of the tick
             # (plus, speculating, every chain's acceptance count)
+            wf0 = self._wall()
             if spec_pack is not None:
                 self.host_syncs += 1
                 toks, naccs = (np.asarray(x) for x in jax.device_get(
                     (self.tokens, self._spec_nacc)))
             else:
                 toks = self._fetch_tokens()
+            tr = self.tm.tracer
+            if tr is not None:
+                tr.add_span("device_get", "tick", TRACK_ENGINE,
+                            self.sched.ticks, self.sched.work_clock,
+                            self.sched.work_clock, wf0, tr.now())
             for req, slot, work in finals:
                 if self._emit(req, int(toks[slot, 0]), work=work):
                     self._finish(req)
@@ -1101,6 +1356,8 @@ class ServeEngine:
                 for r, t in enumerate(spec_pack.tasks):
                     n = int(naccs[r])
                     self.sched.note_spec(len(t.draft), n)
+                    self._event(t.req, "SPEC_VERIFY", t.slot,
+                                drafted=len(t.draft), accepted=n)
                     self._lens_np[t.slot] = t.offset + n + 1
                     # accepted draft prefix + the target's bonus token;
                     # work-clock advances per ACCEPTED token only, so
@@ -1172,12 +1429,23 @@ class ServeEngine:
         self._finished_this_tick = []
         self._tick_profile = (0, 0)
         j0, s0 = self.jit_calls, self.host_syncs
+        tick0 = self.sched.ticks
+        work0 = self.sched.work_clock
+        wt0 = self._wall()
         t0 = time.perf_counter()
         out = self._tick_chunked() if self.chunked \
             else self._tick_monolithic()
-        self.launch_log.append(
-            (self.jit_calls - j0, self.host_syncs - s0,
-             time.perf_counter() - t0) + self._tick_profile)
+        self.tm.ticks.append(TickRecord(
+            self.jit_calls - j0, self.host_syncs - s0,
+            time.perf_counter() - t0, *self._tick_profile))
+        tr = self.tm.tracer
+        if tr is not None:
+            tr.add_span("tick", "tick", TRACK_ENGINE, tick0, work0,
+                        self.sched.work_clock, wt0, tr.now(),
+                        jit_calls=self.jit_calls - j0,
+                        host_syncs=self.host_syncs - s0,
+                        n_chunks=self._tick_profile[0],
+                        n_decode=self._tick_profile[1])
         return out
 
     def _tick_monolithic(self) -> List[Request]:
@@ -1207,13 +1475,24 @@ class ServeEngine:
         live[active] = True
         self.jit_calls += 1
         self.decode_launches += 1
+        pages_read = 0
         if self.paged:
             self.kv_pages_read += sum(
                 -(-(int(self._lens_np[i]) + 1) // self.scfg.page_size)
                 for i in active)
+            pages_read = sum(self._row_pages(i, int(self._lens_np[i]) + 1)
+                             for i in active)
+        lw0 = self._wall()
         self.cache, self.tokens, self.lens = self._decode_fused(
             self.params, self.cache, self.tokens, self.lens,
             jnp.asarray(live), self._next_key())
+        self._note_launch("decode", rows=len(self.slots),
+                          live_rows=len(active), true_tokens=len(active),
+                          padded_tokens=len(self.slots),
+                          kv_pages_read=pages_read,
+                          kv_pages_written=len(active) if self.paged else 0,
+                          new_kv_tokens=len(active), wall0=lw0,
+                          wall1=self._wall())
         self.sched.note_work(len(active))
         self._lens_np[active] += 1
         toks = self._fetch_tokens()

@@ -27,8 +27,11 @@ from typing import List
 import jax.numpy as jnp
 import numpy as np
 
+from typing import Optional
+
 from ..configs.base import (ModelConfig, ServeConfig, dense_equivalent_pages,
                             pages_for_tokens)
+from .telemetry import MetricsRegistry
 
 # canonical page math lives in configs.base; re-exported under the serving
 # vocabulary ("how many pages does this request need")
@@ -71,7 +74,8 @@ class PageAllocator:
     """
 
     def __init__(self, num_pages: int, page_size: int, max_batch: int,
-                 max_seq: int, usable_pages: int = 0):
+                 max_seq: int, usable_pages: int = 0,
+                 metrics: Optional[MetricsRegistry] = None):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         if num_pages < 2:
@@ -92,6 +96,29 @@ class PageAllocator:
         self._refs = np.zeros(num_pages, np.int32)
         self._slot_pages: List[List[int]] = [[] for _ in range(max_batch)]
         self.table = np.zeros((max_batch, self.max_pages_per_seq), np.int32)
+        # page-movement counters (serve/telemetry.py registry; the engine
+        # shares its registry in, a standalone allocator gets its own)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        self._m_alloc = m.counter("pool_pages_allocated_total",
+                                  "Private pages handed out by alloc/cow")
+        self._m_freed = m.counter("pool_pages_freed_total",
+                                  "Pages whose last reference dropped and "
+                                  "returned to the free list")
+        self._m_attach = m.counter("pool_pages_attached_total",
+                                   "Shared-page attachments (prefix-cache "
+                                   "reuse; one refcount increment each)")
+        self._m_cow = m.counter("pool_cow_pages_total",
+                                "Copy-on-write page splits")
+        self._m_free_g = m.gauge("pool_free_pages",
+                                 "Pages currently on the free list")
+        self._m_used_g = m.gauge("pool_used_pages",
+                                 "Usable pages currently referenced")
+        self._note_pool()
+
+    def _note_pool(self):
+        self._m_free_g.set(len(self._free))
+        self._m_used_g.set(self.usable_pages - len(self._free))
 
     # -- queries ----------------------------------------------------------
     @property
@@ -131,6 +158,8 @@ class PageAllocator:
             self._refs[p] = 1
         self.table[slot, len(owned):len(owned) + n] = take
         owned.extend(take)
+        self._m_alloc.inc(n)
+        self._note_pool()
         return list(owned)
 
     def attach(self, slot: int, pages: List[int]) -> List[int]:
@@ -147,6 +176,7 @@ class PageAllocator:
             self._refs[p] += 1
         self.table[slot, len(owned):len(owned) + len(pages)] = pages
         owned.extend(pages)
+        self._m_attach.inc(len(pages))
         return list(owned)
 
     def unref(self, page: int):
@@ -157,6 +187,8 @@ class PageAllocator:
         self._refs[page] -= 1
         if self._refs[page] == 0:
             self._free.append(page)
+            self._m_freed.inc()
+            self._note_pool()
 
     def cow(self, slot: int, index: int):
         """Replace the shared page at `slot` position `index` with a fresh
@@ -169,7 +201,10 @@ class PageAllocator:
         self._refs[new] = 1
         self._slot_pages[slot][index] = new
         self.table[slot, index] = new
+        self._m_alloc.inc()
+        self._m_cow.inc()
         self.unref(old)
+        self._note_pool()
         return old, new
 
     def free_slot(self, slot: int):

@@ -34,9 +34,11 @@ compute and peak working-set pages both drop by roughly the hit rate.
 """
 from __future__ import annotations
 
-from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+from typing import (Callable, Dict, FrozenSet, List, Optional, Sequence, Set,
+                    Tuple)
 
 from .paged_cache import PageAllocator
+from .telemetry import MetricsRegistry
 
 Block = Tuple[int, ...]
 
@@ -58,12 +60,37 @@ class _Node:
 class RadixPrefixCache:
     """Host-side prefix index over a PageAllocator's page pool."""
 
-    def __init__(self, allocator: PageAllocator, page_size: int):
+    def __init__(self, allocator: PageAllocator, page_size: int,
+                 metrics: Optional[MetricsRegistry] = None):
         self.alloc = allocator
         self.page_size = page_size
         self.root = _Node([], [], None)
         self._clock = 0
         self._pages: Set[int] = set()       # pages the tree holds a ref on
+        # cache-traffic counters (serve/telemetry.py registry; the engine
+        # shares its registry in, a standalone cache gets its own) plus an
+        # optional event hook the engine points at its span tracer so
+        # hit / publish / evict instants land on the trace timeline
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        self._m_lookups = m.counter("prefix_lookups_total",
+                                    "Prefix-cache match() walks")
+        self._m_hits = m.counter("prefix_hits_total",
+                                 "match() walks that found >= 1 cached page")
+        self._m_hit_pages = m.counter("prefix_hit_pages_total",
+                                      "Cached pages returned by match()")
+        self._m_pub = m.counter("prefix_published_pages_total",
+                                "Prompt pages newly inserted into the tree")
+        self._m_evict = m.counter("prefix_evicted_pages_total",
+                                  "Cached pages LRU-evicted back to the "
+                                  "pool")
+        self._m_cached_g = m.gauge("prefix_cached_pages",
+                                   "Pages currently held by the tree")
+        self.event_cb: Optional[Callable[..., None]] = None
+
+    def _event(self, name: str, **args):
+        if self.event_cb is not None:
+            self.event_cb(name, **args)
 
     # -- helpers ------------------------------------------------------------
     def _block_split(self, tokens: Sequence[int]) -> List[Block]:
@@ -118,7 +145,13 @@ class RadixPrefixCache:
         """Page ids holding the longest cached prefix of `tokens`, whole
         pages only.  Bumps LRU timestamps along the path.  The caller must
         `attach` (or protect) the pages before anything else can evict."""
-        return self._walk(tokens, touch=True)
+        pages = self._walk(tokens, touch=True)
+        self._m_lookups.inc()
+        if pages:
+            self._m_hits.inc()
+            self._m_hit_pages.inc(len(pages))
+            self._event("prefix_hit", pages=len(pages))
+        return pages
 
     # -- publish ----------------------------------------------------------------
     def publish(self, tokens: Sequence[int], pages: Sequence[int]) -> List[int]:
@@ -129,6 +162,17 @@ class RadixPrefixCache:
         already caches are returned as duplicates - the caller drops its
         reference on those (tree page and slot page may be the same id:
         unref then simply removes the slot's extra reference)."""
+        n_before = len(self._pages)
+        dups = self._insert(tokens, pages)
+        n_new = len(self._pages) - n_before
+        if n_new:
+            self._m_pub.inc(n_new)
+            self._event("prefix_publish", pages=n_new)
+        self._m_cached_g.set(len(self._pages))
+        return dups
+
+    def _insert(self, tokens: Sequence[int],
+                pages: Sequence[int]) -> List[int]:
         blocks = self._block_split(tokens)
         pages = list(pages[:len(blocks)])
         dups: List[int] = []
@@ -207,6 +251,10 @@ class RadixPrefixCache:
                     break
             if not progressed:
                 break                       # everything left is pinned
+        if freed:
+            self._m_evict.inc(freed)
+            self._event("prefix_evict", pages=freed)
+        self._m_cached_g.set(len(self._pages))
         return freed
 
     def _leaves(self) -> List[_Node]:

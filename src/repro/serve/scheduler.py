@@ -55,6 +55,21 @@ import numpy as np
 
 from ..configs.base import ServeConfig
 from .drafting import ngram_draft
+from .telemetry import MetricsRegistry
+
+
+def _registry_counter(name: str):
+    """Class-level compatibility view over a registry counter: reads and
+    `self.x += n` writes on the old attribute names go straight through
+    the MetricsRegistry, so the registry is the one source of truth while
+    every existing call site (and test) keeps its spelling."""
+    def fget(self):
+        return int(self.metrics.get(name).value)
+
+    def fset(self, v):
+        self.metrics.get(name).set_total(v)
+
+    return property(fget, fset)
 
 
 class RequestState(str, Enum):
@@ -218,29 +233,72 @@ class TokenBudgetScheduler:
     engine owns all device state and page accounting; the scheduler never
     touches jax."""
 
-    def __init__(self, scfg: ServeConfig):
+    def __init__(self, scfg: ServeConfig,
+                 metrics: Optional[MetricsRegistry] = None):
         self.scfg = scfg
         self.queue: List[Request] = []
         self.finished: List[Request] = []
-        self.ticks = 0
-        self.work_clock = 0          # total prefill + decode tokens executed
-        self.chunks_run = 0
-        self.packs_run = 0           # batched chunk launches (1/tick max)
+        # every counter below lives in the metrics registry (one typed
+        # source of truth; serve/telemetry.py); the old attribute names -
+        # ticks, work_clock, chunks_run, ... - remain as registry-backed
+        # properties so call sites and tests keep their spelling.  A
+        # standalone scheduler (unit tests) gets its own registry; the
+        # engine passes its shared one in.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        m.counter("sched_ticks_total", "Engine ticks executed")
+        m.counter("sched_work_tokens_total",
+                  "Deterministic work clock: total prefill + decode tokens "
+                  "executed (advances only for ACCEPTED tokens under "
+                  "speculation)")
+        m.counter("sched_chunks_run_total", "Prefill chunks executed")
+        m.counter("sched_packs_run_total",
+                  "Batched ragged chunk launches (at most 1 per tick)")
         # preemption accounting (incremented by the engine)
-        self.preemptions = 0         # victims shed
-        self.resumes = 0             # preempted requests re-admitted
-        self.pages_reclaimed = 0     # pages returned to the pool by shedding
-        self.pages_parked = 0        # victim pages published into the tree
+        m.counter("sched_preemptions_total", "Running requests shed by "
+                  "priority preemption")
+        m.counter("sched_resumes_total",
+                  "Preempted requests re-admitted through the chunk path")
+        m.counter("sched_pages_reclaimed_total",
+                  "KV pages returned to the pool by preemption shedding")
+        m.counter("sched_pages_parked_total", "Victim KV pages published "
+                  "into the prefix tree on preemption")
         # speculative-decoding accounting (serve/drafting.py proposes,
         # the engine's verify launch accepts/rejects).  Drafted tokens
         # consume tick budget but NOT work clock: the work clock advances
         # only for ACCEPTED (emitted) tokens, so work-clock TTFT/TBT and
         # the final work_tokens total are directly comparable between
         # speculative-on and speculative-off runs of the same trace.
-        self.spec_drafted = 0        # draft tokens verified
-        self.spec_accepted = 0       # draft tokens accepted (emitted)
+        m.counter("sched_spec_drafted_total",
+                  "Speculative draft tokens sent to the verify launch")
+        m.counter("sched_spec_accepted_total",
+                  "Speculative draft tokens accepted (emitted)")
+        m.counter("sched_spec_rejected_total",
+                  "Speculative draft tokens rejected by the verify launch")
+        m.gauge("sched_queue_depth",
+                "Requests waiting for admission (RESUMING included)")
+        m.gauge("sched_queue_depth_by_priority",
+                "Admission queue depth per priority class",
+                labelnames=("priority",))
+        m.histogram("sched_spec_chain_accept_ratio",
+                    "Per-chain speculative acceptance ratio "
+                    "(accepted / drafted)",
+                    buckets=(0.0, 0.25, 0.5, 0.75, 1.0))
         # per-tick budget accounting: (decode_tokens, prefill_tokens)
         self.tick_log: List[Tuple[int, int]] = []
+
+    # registry-backed compatibility views (one source of truth: metrics)
+    ticks = _registry_counter("sched_ticks_total")
+    work_clock = _registry_counter("sched_work_tokens_total")
+    chunks_run = _registry_counter("sched_chunks_run_total")
+    packs_run = _registry_counter("sched_packs_run_total")
+    preemptions = _registry_counter("sched_preemptions_total")
+    resumes = _registry_counter("sched_resumes_total")
+    pages_reclaimed = _registry_counter("sched_pages_reclaimed_total")
+    pages_parked = _registry_counter("sched_pages_parked_total")
+    spec_drafted = _registry_counter("sched_spec_drafted_total")
+    spec_accepted = _registry_counter("sched_spec_accepted_total")
+    spec_rejected = _registry_counter("sched_spec_rejected_total")
 
     # -- queue / admission policy -----------------------------------------
     def submit(self, req: Request):
@@ -449,6 +507,10 @@ class TokenBudgetScheduler:
         advanced by the engine per ACCEPTED token at emission time."""
         self.spec_drafted += drafted
         self.spec_accepted += accepted
+        self.spec_rejected += drafted - accepted
+        if drafted:
+            self.metrics.get("sched_spec_chain_accept_ratio") \
+                .observe(accepted / drafted)
 
     # -- accounting --------------------------------------------------------
     def note_work(self, n_tokens: int):
@@ -457,6 +519,7 @@ class TokenBudgetScheduler:
     def note_tick(self, decode_tokens: int, prefill_tokens: int):
         self.ticks += 1
         self.tick_log.append((decode_tokens, prefill_tokens))
+        self.metrics.get("sched_queue_depth").set(len(self.queue))
 
     def note_token(self, req: Request, wall: float,
                    work: Optional[int] = None):
@@ -498,6 +561,11 @@ class TokenBudgetScheduler:
         tbt_work = [d for r in reqs for d in r.tbt_work()]
         stalls = self.token_stalls()
         per_tick = [d + p for d, p in self.tick_log]
+        self.metrics.get("sched_queue_depth").set(len(self.queue))
+        depth_by_prio = self.queue_depth_by_priority()
+        for prio, n in depth_by_prio.items():
+            self.metrics.get("sched_queue_depth_by_priority") \
+                .labels(prio).set(n)
         return {
             "requests": len(reqs),
             "ticks": self.ticks,
@@ -510,10 +578,13 @@ class TokenBudgetScheduler:
             "pages_parked": self.pages_parked,
             "spec_drafted": self.spec_drafted,
             "spec_accepted": self.spec_accepted,
+            "spec_rejected": self.spec_rejected,
             "spec_acceptance_rate": self.spec_accepted / self.spec_drafted
             if self.spec_drafted else 0.0,
+            "spec_chain_accept_mean":
+            self.metrics.get("sched_spec_chain_accept_ratio").mean,
             "queue_depth": len(self.queue),
-            "queue_depth_by_priority": self.queue_depth_by_priority(),
+            "queue_depth_by_priority": depth_by_prio,
             "max_tick_tokens": max(per_tick) if per_tick else 0,
             "ttft_wall_p50": _percentile(ttft_wall, 50),
             "ttft_wall_p95": _percentile(ttft_wall, 95),
