@@ -52,6 +52,19 @@ outputs, equal work-clock totals, nonzero acceptance, and generated
 tokens per decode launch > 1.5x the non-speculative baseline (tokens
 per KV page read reported alongside).
 
+--fleet serves the shared-prefix trace (one warmup per prefix, then the
+followers) through a FleetRouter (serve/router.py, docs/routing.md)
+sweeping replica counts (default 1/2/4) under the cache-hit-weighted
+affinity policy, with round-robin at the same replica counts as the
+control.  Affinity peeks every replica's radix tree per submit and lands
+each follower on the replica that already caches its prefix; round-robin
+scatters them.  Asserted, never eyeballed: bit-identical greedy outputs
+across EVERY fleet size and policy (replicas share the jitted steps),
+per-replica page conservation after the drain, and strictly fewer
+prefill tokens computed under affinity than round-robin at every n > 1
+(the prefill-tokens-saved curve is the headline artifact,
+BENCH_fleet.json).
+
 --preempt-trace exercises decode-priority budget shaping and victim
 preemption (docs/scheduling.md): in-flight decodes' p95 work-clock TBT
 under a long-prompt prefill burst must be strictly lower with
@@ -88,7 +101,8 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.configs.base import ServeConfig
 from repro.models import build_model
-from repro.serve import dense_kv_bytes, paged_kv_bytes, pages_needed
+from repro.serve import (FleetConfig, FleetRouter, dense_kv_bytes,
+                         paged_kv_bytes, pages_needed)
 from repro.serve.engine import ServeEngine
 
 # --emit-trace / --emit-metrics plumbing: every mode builds engines
@@ -436,6 +450,127 @@ def run_prefix_trace(args, out_json):
 
 
 # ===========================================================================
+# fleet routing (prefix-aware affinity vs round-robin, 1/2/4 replicas)
+# ===========================================================================
+
+def run_fleet_mode(model, params, scfg, fcfg, warm, follow, max_new):
+    """Serve the warm-then-followers shared-prefix trace through one
+    router configuration.  Warmups drain first so every shared prefix is
+    published on SOME replica before the followers are scored against the
+    fleet; the followers then run concurrently."""
+    router = FleetRouter(model, params, scfg, fcfg)
+    out = {}
+    t0 = time.time()
+    for wave in (warm, follow):
+        for p in wave:
+            router.submit(p, max_new_tokens=max_new)
+        for r in router.run_until_done(max_ticks=100_000):
+            out[r.fleet_uid] = r.out_tokens
+    dt = time.time() - t0
+    assert len(out) == len(warm) + len(follow)
+    router.check_invariants()
+    st = router.fleet_stats()
+    toks = sum(len(t) for t in out.values())
+    row = {"n_replicas": st["n_replicas"], "policy": st["policy"],
+           "requests": st["requests"], "tokens": toks, "seconds": dt,
+           "tok_per_s": toks / max(dt, 1e-9),
+           "prefill_tokens": st["prefill_tokens"],
+           "prefix_hit_tokens": st["prefix_hit_tokens"],
+           "hit_rate": st["prefix_hit_tokens"]
+           / max(st["prompt_tokens"], 1),
+           "ticks": st["ticks"], "dispatch": st["dispatch"],
+           "spills": st["spills"], "affinity_hits": st["affinity_hits"],
+           "affinity_hit_tokens": st["affinity_hit_tokens"]}
+    return out, row, router
+
+
+def run_fleet_trace(args, out_json):
+    """Replica-count sweep of the fleet router on the shared-prefix trace:
+    affinity at every count in --replicas, round-robin at the same counts
+    as the control.  The affinity policy must (a) reproduce the 1-replica
+    outputs bit-identically at every fleet size (shared jitted steps) and
+    (b) strictly beat round-robin on prefill tokens computed at every
+    n > 1 - a follower routed off its cached prefix recomputes the whole
+    shared prefix, and that recompute is exactly what prefix-aware
+    dispatch exists to avoid."""
+    cfg = get_smoke_config(args.arch).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    warm, follow = make_prefix_trace(rng, cfg.vocab_size, args.groups,
+                                     args.followers, args.shared_len,
+                                     args.tail_len)
+    per_req = pages_needed(args.shared_len + args.tail_len + args.max_new,
+                           args.page_size)
+    num_pages = (args.groups * pages_needed(args.shared_len, args.page_size)
+                 + args.max_batch * per_req + 1)
+    scfg = ServeConfig(max_batch=args.max_batch, max_seq=args.max_seq,
+                       max_new_tokens=args.max_new, paged=True,
+                       page_size=args.page_size, num_pages=num_pages,
+                       prefix_cache=True,
+                       telemetry=bool(args.emit_trace))
+    sweep = [("affinity", n) for n in args.replicas]
+    sweep += [("round_robin", n) for n in args.replicas if n > 1]
+
+    print(f"# arch={cfg.name} groups={args.groups} "
+          f"followers={args.followers} shared={args.shared_len} "
+          f"tail={args.tail_len} max_new={args.max_new} "
+          f"pool={num_pages}/replica replicas={args.replicas}")
+    print("mode,replicas,requests,tokens,seconds,tok_per_s,"
+          "prefill_tokens,hit_rate,affinity_hit_tokens,spills,dispatch")
+    rows, outs = {}, {}
+    router = None
+    for policy, n in sweep:
+        key = f"{policy}_n{n}"
+        outs[key], rows[key], router = run_fleet_mode(
+            model, params, scfg,
+            FleetConfig(n_replicas=n, policy=policy),
+            warm, follow, args.max_new)
+        r = rows[key]
+        print(f"{policy},{n},{r['requests']},{r['tokens']},"
+              f"{r['seconds']:.2f},{r['tok_per_s']:.1f},"
+              f"{r['prefill_tokens']},{r['hit_rate']:.2f},"
+              f"{r['affinity_hit_tokens']},{r['spills']},"
+              f"\"{r['dispatch']}\"")
+    if args.emit_trace and router is not None:
+        router.export_trace(args.emit_trace, clock="work")
+        print(f"# wrote {args.emit_trace} (merged fleet trace, one track "
+              f"group per replica; open in Perfetto)")
+
+    base_key = f"affinity_n{args.replicas[0]}"
+    for key, out in outs.items():
+        assert out == outs[base_key], \
+            f"{key} changed greedy outputs vs {base_key}"
+    curve = {n: rows[f"affinity_n{n}"]["prefill_tokens"]
+             for n in args.replicas}
+    print(f"# affinity prefill-token curve over replicas: {curve}")
+    savings = {}
+    for n in args.replicas:
+        if n <= 1 or f"round_robin_n{n}" not in rows:
+            continue
+        aff = rows[f"affinity_n{n}"]
+        rr = rows[f"round_robin_n{n}"]
+        saved = 1 - aff["prefill_tokens"] / max(rr["prefill_tokens"], 1)
+        print(f"# n={n}: affinity prefill {aff['prefill_tokens']} vs "
+              f"round-robin {rr['prefill_tokens']} ({saved:.0%} saved)")
+        assert aff["prefill_tokens"] < rr["prefill_tokens"], \
+            f"affinity routing saved no prefill over round-robin at n={n}"
+        assert aff["affinity_hit_tokens"] > 0, \
+            f"affinity never matched a cached prefix at n={n}"
+        savings[f"n{n}"] = {"prefill_tokens_saved_frac": saved,
+                            "affinity_hit_tokens":
+                            aff["affinity_hit_tokens"]}
+    rows["savings_fleet"] = dict(savings,
+                                 prefill_curve={str(n): curve[n]
+                                                for n in args.replicas},
+                                 identical_greedy_outputs=True)
+    if out_json:
+        Path(out_json).write_text(json.dumps(rows, indent=2))
+        print(f"# wrote {out_json}")
+    return rows
+
+
+# ===========================================================================
 # self-speculative decoding (draft/verify vs plain decode)
 # ===========================================================================
 
@@ -752,6 +887,14 @@ def main(argv=None):
     ap.add_argument("--spec-max-new", type=int, default=512,
                     help="speculative trace: generation length (long "
                          "enough for self-drafting to engage)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="shared-prefix trace through the fleet router: "
+                         "replica-count sweep (--replicas) of prefix-aware "
+                         "affinity dispatch vs round-robin; bit-identical "
+                         "outputs across every size and strictly fewer "
+                         "prefill tokens than round-robin, both asserted")
+    ap.add_argument("--replicas", type=int, nargs="+", default=[1, 2, 4],
+                    help="fleet trace: replica counts to sweep")
     ap.add_argument("--preempt-trace", action="store_true",
                     help="decode-priority shaping (decode p95 TBT with vs "
                          "without the prefill-share cap under a prefill "
@@ -802,6 +945,8 @@ def main(argv=None):
         rows = run_prefix_trace(args, args.json)
     elif args.chunked:
         rows = run_chunked_trace(args, args.json)
+    elif args.fleet:
+        rows = run_fleet_trace(args, args.json)
     elif args.speculative:
         rows = run_spec_trace(args, args.json)
     elif args.preempt_trace:

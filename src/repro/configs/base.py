@@ -252,6 +252,18 @@ class ServeConfig:
     # behaves exactly like preemption=False.
     preemption: bool = False
 
+    # --- SLO-driven priority aging (serve/scheduler.py) ---------------------
+    # priority_aging=True lets queued (and preempted/parked) requests age
+    # into higher ADMISSION priority: every priority_age_tokens of
+    # work-clock age adds +1 effective priority, so a low-priority request
+    # outranks a priority-P stream after at most (P + 1) *
+    # priority_age_tokens tokens of engine work - a deterministic
+    # starvation bound.  Aging affects queue ordering only; preemption
+    # keeps using base priority (an aged request never evicts running
+    # work, which rules out preempt/re-preempt cycles).
+    priority_aging: bool = False
+    priority_age_tokens: int = 256   # work tokens of age per +1 priority
+
     # --- self-speculative decoding (serve/engine.py + serve/drafting.py) ----
     # speculative=True drafts up to spec_k tokens per decoding request per
     # tick by prompt-lookup over the request's OWN token history (n-gram
@@ -382,6 +394,10 @@ class ServeConfig:
             raise ValueError("preemption requires chunked=True (a preempted "
                              "request resumes through the chunked prefill "
                              "path)")
+        if self.priority_aging and self.priority_age_tokens < 1:
+            raise ValueError(
+                f"priority_age_tokens must be >= 1 when priority_aging is "
+                f"on, got {self.priority_age_tokens}")
         if self.usable_pages:
             if not self.paged:
                 raise ValueError("usable_pages requires paged=True")

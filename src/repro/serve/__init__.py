@@ -3,6 +3,7 @@ from .engine import ServeEngine
 from .paged_cache import (OutOfPages, PageAllocator, dense_kv_bytes,
                           paged_kv_bytes, pages_needed)
 from .prefix_cache import RadixPrefixCache
+from .router import FleetConfig, FleetRouter
 from .sampling import (apply_top_k, apply_top_p, sample, sample_chain,
                        speculative_accept)
 from .scheduler import (ChunkBatch, ChunkTask, DraftTask, Request,
@@ -18,7 +19,8 @@ from .telemetry import (Counter, Gauge, Histogram, LaunchRecord,
                         Telemetry, TickRecord, TraceEvent,
                         export_chrome_trace, movement_breakdown)
 
-__all__ = ["ChunkBatch", "ChunkTask", "Counter", "DraftTask", "Gauge",
+__all__ = ["ChunkBatch", "ChunkTask", "Counter", "DraftTask", "FleetConfig",
+           "FleetRouter", "Gauge",
            "Histogram", "LaunchRecord", "MetricError", "MetricsRegistry",
            "OutOfPages", "PageAllocator", "RadixPrefixCache", "Request",
            "RequestState", "ServeEngine", "Span", "SpanTracer", "SpecBatch",

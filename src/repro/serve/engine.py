@@ -268,6 +268,10 @@ class ServeEngine:
                 "High-water mark of pool pages in use (cached included)")
         m.gauge("serve_peak_live_pages",
                 "High-water mark of distinct pages referenced by slots")
+        m.gauge("serve_outstanding_work_tokens",
+                "Queued + in-flight work tokens (prompt remaining plus "
+                "unspent generation budget) - the load signal load_stats() "
+                "publishes for the fleet router")
         self.prefix: Optional[RadixPrefixCache] = None
         if scfg.prefix_cache and not scfg.paged:
             raise ValueError("prefix_cache requires paged=True")
@@ -516,6 +520,31 @@ class ServeEngine:
                 if self.prefix is not None else 0,
                 "peak_pages": self.peak_pages,
                 "peak_live_pages": self.peak_live_pages}
+
+    def load_stats(self) -> Dict[str, int]:
+        """Cheap occupancy view for dispatch decisions (the fleet router
+        reads this once per replica per submit): queue depth, in-flight
+        requests, outstanding work tokens, and page headroom.  Pure
+        host-side bookkeeping reads - no device sync, no LRU or refcount
+        effects - and the work-token total is published to the
+        registry gauge `serve_outstanding_work_tokens`, so the load
+        signal the router acted on is visible in metrics snapshots."""
+        inflight = [r for r in self.slots if r is not None]
+        work = sum(r.prompt_remaining + r.remaining_new
+                   for r in inflight)
+        work += sum(r.prompt_remaining + r.remaining_new
+                    for r in self.queue)
+        self.tm.registry.get("serve_outstanding_work_tokens").set(work)
+        free = int(self.allocator.free_pages) if self.paged \
+            else 1 << 30                # dense KV never backpressures
+        evictable = self.prefix.evictable_pages() \
+            if self.prefix is not None else 0
+        return {"queue_depth": len(self.queue),
+                "inflight": len(inflight),
+                "free_slots": sum(s is None for s in self.slots),
+                "outstanding_work_tokens": work,
+                "free_pages": free,
+                "evictable_pages": evictable}
 
     def stats(self) -> Dict[str, float]:
         """Engine stats API: scheduler latency aggregates (p50/p95 TTFT

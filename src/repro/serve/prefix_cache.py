@@ -113,9 +113,9 @@ class RadixPrefixCache:
     def cached_prefix_len(self, tokens: Sequence[int]) -> int:
         """Tokens of `tokens` currently resident in cached pages (whole
         pages only) - what a preempted request would NOT have to re-prefill
-        if it resumed right now.  Walks the tree without bumping LRU
-        stamps, so measuring survival cannot perturb eviction order."""
-        return len(self._walk(tokens, touch=False)) * self.page_size
+        if it resumed right now.  Built on the read-only `peek`, so
+        measuring survival cannot perturb eviction order."""
+        return len(self.peek(tokens)) * self.page_size
 
     def _walk(self, tokens: Sequence[int], touch: bool) -> List[int]:
         """Longest-cached-prefix walk shared by match / cached_prefix_len:
@@ -140,11 +140,24 @@ class RadixPrefixCache:
             node, i = child, i + m
         return out
 
+    # -- peek (read-only) -----------------------------------------------------
+    def peek(self, tokens: Sequence[int]) -> List[int]:
+        """Side-effect-free longest-cached-prefix lookup: the page ids
+        `match` WOULD return, without claiming them.  Never bumps LRU
+        stamps, never advances the tree clock, never touches refcounts,
+        and records no metrics or trace events - so an outside observer
+        (the fleet router scoring every replica per request) cannot
+        perturb eviction order or hit-rate accounting on replicas that
+        end up not receiving the request.  The result is advisory: pages
+        may be evicted between peek and a later match/attach."""
+        return self._walk(tokens, touch=False)
+
     # -- match ----------------------------------------------------------------
     def match(self, tokens: Sequence[int]) -> List[int]:
         """Page ids holding the longest cached prefix of `tokens`, whole
         pages only.  Bumps LRU timestamps along the path.  The caller must
-        `attach` (or protect) the pages before anything else can evict."""
+        `attach` (or protect) the pages before anything else can evict.
+        Use `peek` for a read-only lookup with none of these effects."""
         pages = self._walk(tokens, touch=True)
         self._m_lookups.inc()
         if pages:

@@ -1,0 +1,392 @@
+"""Fleet router: prefix-aware dispatch over N independent serve engines.
+
+The paper's core economy - keep data where it already lives instead of
+round-tripping it through a shared buffer - applies one level above the
+kernel: a request whose KV prefix is already resident on some replica
+should LAND on that replica, not recompute the prefix somewhere else.
+This module is that scheduling layer.  A `FleetRouter` fronts N
+independent `ServeEngine` replicas (each with its own page pool, radix
+prefix tree, scheduler, and telemetry registry) and owns the fleet
+lifecycle: `submit()` / `tick()` (`step()`) / `run_until_done()` mirror
+the single-engine API, so callers swap an engine for a fleet without
+code changes.
+
+Dispatch is a cache-hit-weighted score, evaluated per submit:
+
+  score(r) = saved_r
+             - load_weight     * outstanding_work_r
+             - pressure_weight * page_shortfall_r * page_size
+
+  saved_r            prompt tokens replica r's radix tree already caches,
+                     read with the side-effect-free `RadixPrefixCache.
+                     peek()` - peeking N-1 losing replicas must not bump
+                     their LRU stamps, refcounts, or hit counters (a
+                     router probe is not a hit).  Capped at len(prompt)-1
+                     because a fully cached prompt still recomputes its
+                     last token for logits.
+  outstanding_work_r replica r's queued + in-flight work tokens (prompt
+                     remaining + unspent generation budget), from the
+                     engine's registry-backed `load_stats()` - the
+                     queue-depth / in-flight-work term.
+  page_shortfall_r   pages of the request's reservation that replica r
+                     could not grant right now even after LRU eviction
+                     (free + evictable headroom) - the page-pool-pressure
+                     term, scaled to tokens by page_size.
+
+All three terms are deterministic host-side integers; ties break to the
+LOWEST replica index, so a replayed trace routes bit-identically.
+Placement is STICKY: a request never migrates after submit (its KV pages
+live in one replica's pool; preemption inside a replica parks and
+resumes there).  Per-replica admission backpressure is a queue-depth cap
+(`spill_queue_depth`): when the best-scoring replica's queue is at the
+cap the request SPILLS to the next-best under the cap (counted in
+`fleet_spills_total`); if every replica is at the cap the best one takes
+it anyway - the cap sheds imbalance, it never rejects work.
+
+Fleet telemetry: the router has its own `MetricsRegistry` (dispatch /
+spill / affinity-hit counters, per-replica dispatch labels),
+`fleet_snapshot()` adds a summed view over every replica's registry,
+`fleet_stats()` aggregates the engines' `stats()`, and `export_trace()`
+merges every replica's Perfetto trace into one file with one process
+(track group) per replica.
+
+Because jitted serve steps are SHARED per model across engines
+(`engine._shared_steps`), every replica runs the very same compiled
+executables - greedy outputs for a given request are bit-identical
+whichever replica serves it, which is what makes the differential
+1-replica-vs-N-replica conformance suite (tests/test_router.py) exact
+rather than approximate.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from ..configs.base import ServeConfig
+from ..models import Model
+from .engine import ServeEngine
+from .paged_cache import pages_needed
+from .scheduler import Request
+from .telemetry import MetricsRegistry
+
+
+@dataclass(frozen=True)
+class FleetConfig:
+    """Router-level knobs (per-replica behavior stays in ServeConfig)."""
+    n_replicas: int = 2
+    policy: str = "affinity"        # affinity | round_robin
+    # score weights: tokens of cached prefix a unit of each term is worth
+    load_weight: float = 0.1        # per outstanding work token
+    pressure_weight: float = 4.0    # per token of ungrantable reservation
+    # per-replica admission backpressure: spill to the next-best replica
+    # when the chosen one has this many requests queued (0 = off)
+    spill_queue_depth: int = 0
+
+    def validate(self) -> "FleetConfig":
+        if self.n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, "
+                             f"got {self.n_replicas}")
+        if self.policy not in ("affinity", "round_robin"):
+            raise ValueError(f"policy must be 'affinity' or 'round_robin', "
+                             f"got {self.policy!r}")
+        if self.load_weight < 0 or self.pressure_weight < 0:
+            raise ValueError("score weights must be >= 0")
+        if self.spill_queue_depth < 0:
+            raise ValueError(f"spill_queue_depth must be >= 0, "
+                             f"got {self.spill_queue_depth}")
+        return self
+
+
+class FleetRouter:
+    """N serve-engine replicas behind one engine-shaped front door."""
+
+    def __init__(self, model: Model, params, scfg: ServeConfig,
+                 fcfg: Optional[FleetConfig] = None):
+        self.fcfg = (fcfg or FleetConfig()).validate()
+        self.scfg = scfg
+        # replicas share the model/params (and therefore the jitted steps:
+        # identical executables => bit-identical numerics across replicas)
+        self.engines: List[ServeEngine] = [
+            ServeEngine(model, params, scfg)
+            for _ in range(self.fcfg.n_replicas)]
+        # fleet uid -> (replica index, replica-local Request); fleet uids
+        # are issued in submit order, so the SAME trace through different
+        # fleet sizes keys its outputs identically
+        self._fuid = 0
+        self.placement: Dict[int, int] = {}
+        self.requests: Dict[int, Request] = {}
+        self._rr_next = 0               # round_robin cursor
+        self.metrics = MetricsRegistry()
+        m = self.metrics
+        m.counter("fleet_requests_total", "Requests accepted by the router")
+        m.counter("fleet_dispatch_total",
+                  "Requests dispatched, per replica", labelnames=("replica",))
+        m.counter("fleet_spills_total",
+                  "Dispatches diverted off the best-scoring replica by the "
+                  "spill_queue_depth admission cap")
+        m.counter("fleet_affinity_hits_total",
+                  "Dispatches whose chosen replica already cached >= 1 "
+                  "prompt page at decision time")
+        m.counter("fleet_affinity_hit_tokens_total",
+                  "Prompt tokens already cached on the chosen replica at "
+                  "decision time (peek-measured, whole pages)")
+        m.counter("fleet_ticks_total",
+                  "Fleet ticks (one tick of every replica)")
+        m.gauge("fleet_replicas", "Engine replicas fronted by this router")
+        m.get("fleet_replicas").set(self.fcfg.n_replicas)
+
+    # ------------------------------------------------------------------
+    # dispatch scoring
+    # ------------------------------------------------------------------
+    def _peek_saved(self, eng: ServeEngine,
+                    prompt: Sequence[int]) -> Tuple[int, int, bool]:
+        """(saved_tokens, cached_pages, full_cover) on one replica, via
+        the side-effect-free peek - probing must not perturb the replica's
+        LRU order, refcounts, or hit accounting."""
+        if eng.prefix is None:
+            return 0, 0, False
+        pages = eng.prefix.peek(prompt)
+        ps = eng.scfg.page_size
+        full = len(pages) * ps >= len(prompt)
+        saved = min(len(pages) * ps, len(prompt) - 1)
+        return saved, len(pages), full
+
+    def _score(self, ridx: int, prompt: Sequence[int],
+               n_new: int) -> Tuple[float, int]:
+        """(score, saved_tokens) of dispatching to replica `ridx`.  All
+        inputs are deterministic host-side state; equal scores are broken
+        by replica index at the call site."""
+        eng = self.engines[ridx]
+        saved, n_cached, full = self._peek_saved(eng, prompt)
+        load = eng.load_stats()
+        pressure = 0
+        if eng.paged:
+            need = pages_needed(len(prompt) + n_new, eng.scfg.page_size)
+            # cached pages are attached, not allocated - but a fully
+            # cached prompt COWs its final page, which costs one fresh one
+            need -= max(0, n_cached - (1 if full else 0))
+            headroom = load["free_pages"] + load["evictable_pages"]
+            pressure = max(0, need - headroom)
+        score = (saved
+                 - self.fcfg.load_weight * load["outstanding_work_tokens"]
+                 - self.fcfg.pressure_weight * pressure
+                 * eng.scfg.page_size)
+        return score, saved
+
+    def _choose(self, prompt: Sequence[int],
+                n_new: int) -> Tuple[int, int, int]:
+        """(chosen replica, best-scoring replica, saved tokens on the
+        chosen one).  chosen != best iff the admission cap spilled."""
+        n = len(self.engines)
+        if self.fcfg.policy == "round_robin":
+            base = self._rr_next % n
+            self._rr_next += 1
+            order = [(base + k) % n for k in range(n)]
+            saved_of = {}               # peeked lazily, accounting only
+        else:
+            scored = [self._score(i, prompt, n_new) for i in range(n)]
+            # highest score wins; ties to the lowest index (sort is
+            # stable and the key's second element pins the order), so
+            # replays are bit-reproducible
+            order = sorted(range(n), key=lambda i: (-scored[i][0], i))
+            saved_of = {i: scored[i][1] for i in range(n)}
+        best = chosen = order[0]
+        cap = self.fcfg.spill_queue_depth
+        if cap:
+            for i in order:
+                if len(self.engines[i].queue) < cap:
+                    chosen = i
+                    break
+            # every replica at the cap: the best one absorbs the request
+            # (backpressure sheds imbalance, it never rejects work)
+        if chosen not in saved_of:
+            saved_of[chosen] = self._peek_saved(self.engines[chosen],
+                                                prompt)[0]
+        return chosen, best, saved_of[chosen]
+
+    # ------------------------------------------------------------------
+    # engine-shaped lifecycle
+    # ------------------------------------------------------------------
+    def submit(self, prompt: List[int],
+               max_new_tokens: Optional[int] = None,
+               stop_tokens: Optional[Sequence[int]] = None,
+               priority: int = 0) -> int:
+        """Route one request and enqueue it on the chosen replica.
+        Returns a FLEET uid (monotone in submit order, stable across
+        fleet sizes); the placement is sticky for the request's life."""
+        n_new = self.scfg.max_new_tokens if max_new_tokens is None \
+            else max_new_tokens
+        ridx, best, saved = self._choose(prompt, n_new)
+        eng = self.engines[ridx]
+        eng.submit(prompt, max_new_tokens, stop_tokens, priority)
+        req = eng.sched.queue[-1]
+        self._fuid += 1
+        fuid = self._fuid
+        req.fleet_uid = fuid            # stamped for finished-tick callers
+        self.placement[fuid] = ridx
+        self.requests[fuid] = req
+        m = self.metrics
+        m.get("fleet_requests_total").inc()
+        m.get("fleet_dispatch_total").labels(str(ridx)).inc()
+        if ridx != best:
+            m.get("fleet_spills_total").inc()
+        if saved > 0:
+            m.get("fleet_affinity_hits_total").inc()
+            m.get("fleet_affinity_hit_tokens_total").inc(saved)
+        return fuid
+
+    def tick(self) -> List[Request]:
+        """One fleet iteration: every replica ticks once, in replica
+        order (replicas are independent, so the order is cosmetic - but
+        fixed, for deterministic merged telemetry).  Returns the requests
+        that finished this tick, each stamped with `.fleet_uid`."""
+        finished: List[Request] = []
+        for eng in self.engines:
+            finished.extend(eng.tick())
+        self.metrics.get("fleet_ticks_total").inc()
+        return finished
+
+    # the engine API spells one iteration `tick`; `step` is the router
+    # alias some fleet-level callers prefer
+    step = tick
+
+    def run_until_done(self, max_ticks: int = 10_000,
+                       on_exhaust: str = "raise") -> List[Request]:
+        """Tick until every replica's queue and slots drain (same
+        semantics as ServeEngine.run_until_done)."""
+        done: List[Request] = []
+        for _ in range(max_ticks):
+            done.extend(self.tick())
+            if self.idle:
+                return done
+        if self.idle:
+            return done
+        pending = sum(len(e.queue) + sum(s is not None for s in e.slots)
+                      for e in self.engines)
+        msg = (f"FleetRouter.run_until_done: {max_ticks} ticks exhausted "
+               f"with {pending} requests still pending "
+               f"({len(done)} finished)")
+        if on_exhaust == "raise":
+            raise RuntimeError(msg)
+        import warnings
+        warnings.warn(msg)
+        return done
+
+    @property
+    def idle(self) -> bool:
+        return all(not e.queue and all(s is None for s in e.slots)
+                   for e in self.engines)
+
+    def outputs(self) -> Dict[int, List[int]]:
+        """{fleet uid: generated tokens} for every submitted request -
+        the differential-conformance view (fleet uids are submit-ordered,
+        so 1-replica and N-replica runs of one trace key identically)."""
+        return {fuid: list(r.out_tokens)
+                for fuid, r in self.requests.items()}
+
+    def check_invariants(self):
+        """Every replica's engine invariants plus the router's own
+        bookkeeping: placements in range, dispatch counters conserved."""
+        for eng in self.engines:
+            eng.check_invariants()
+        n = len(self.engines)
+        assert all(0 <= r < n for r in self.placement.values()), \
+            "placement outside the fleet"
+        dispatched = sum(
+            child.value for _, child in
+            self.metrics.get("fleet_dispatch_total").label_items())
+        assert dispatched == len(self.placement) \
+            == self.metrics.get("fleet_requests_total").value, \
+            "dispatch accounting out of sync with placements"
+
+    # ------------------------------------------------------------------
+    # fleet telemetry
+    # ------------------------------------------------------------------
+    _SUM_KEYS = ("requests", "work_tokens", "gen_tokens", "prefill_tokens",
+                 "prefix_hit_tokens", "prompt_tokens", "jit_calls",
+                 "host_syncs", "chunks_run", "packs_run", "preemptions",
+                 "resumes", "priority_boosts", "cow_copies")
+
+    def dispatch_counts(self) -> List[int]:
+        """Requests dispatched per replica, replica order."""
+        by_label = dict(self.metrics.get("fleet_dispatch_total")
+                        .label_items())
+        return [int(by_label[(str(i),)].value) if (str(i),) in by_label
+                else 0 for i in range(len(self.engines))]
+
+    def fleet_stats(self) -> Dict[str, Any]:
+        """Aggregated engine stats (summed per-replica counters) plus the
+        router's dispatch accounting - the fleet analog of
+        ServeEngine.stats()."""
+        per = [e.stats() for e in self.engines]
+        out: Dict[str, Any] = {
+            k: sum(s[k] for s in per) for k in self._SUM_KEYS}
+        out["n_replicas"] = len(self.engines)
+        out["policy"] = self.fcfg.policy
+        out["ticks"] = int(self.metrics.get("fleet_ticks_total").value)
+        out["dispatch"] = self.dispatch_counts()
+        out["spills"] = int(self.metrics.get("fleet_spills_total").value)
+        out["affinity_hits"] = int(
+            self.metrics.get("fleet_affinity_hits_total").value)
+        out["affinity_hit_tokens"] = int(
+            self.metrics.get("fleet_affinity_hit_tokens_total").value)
+        out["per_replica"] = per
+        return out
+
+    @staticmethod
+    def _sum_value(acc: Dict[str, Any], name: str, value: Any):
+        """Fold one replica's metric value into the summed view: scalars
+        add, labeled metrics add per label, histograms add count/sum."""
+        if isinstance(value, dict):
+            if "buckets" in value:          # histogram
+                slot = acc.setdefault(name, {"count": 0, "sum": 0.0})
+                slot["count"] += value["count"]
+                slot["sum"] += value["sum"]
+            else:                           # labeled children
+                slot = acc.setdefault(name, {})
+                for k, v in value.items():
+                    slot[k] = slot.get(k, 0) + v
+            return
+        acc[name] = acc.get(name, 0) + value
+
+    def fleet_snapshot(self) -> Dict[str, Any]:
+        """The fleet registry view: the router's own metrics, every
+        replica's full registry snapshot, and a `sum` section folding the
+        per-replica counters/gauges together (gauges sum too - fleet
+        queue depth is the sum of replica queue depths; peak watermarks
+        become a fleet-wide upper bound)."""
+        replicas = [e.metrics_snapshot() for e in self.engines]
+        summed: Dict[str, Any] = {}
+        for snap in replicas:
+            for name, meta in snap.items():
+                self._sum_value(summed, name, meta["value"])
+        return {"router": self.metrics.snapshot(),
+                "replicas": replicas,
+                "sum": summed}
+
+    def export_trace(self, path, clock: str = "wall") -> Dict[str, Any]:
+        """Merge every replica's Perfetto trace into one file with one
+        process-pair (engine + requests track group) per replica, pids
+        offset so Perfetto renders `replica0:engine`, `replica0:requests`,
+        `replica1:engine`, ...  Requires ServeConfig(telemetry=True).
+        With clock="wall" the replicas share the host clock but not an
+        epoch-aligned tracer start; clock="work" is the deterministic,
+        replay-stable view."""
+        events: List[Dict[str, Any]] = []
+        for i, eng in enumerate(self.engines):
+            trace = eng.export_trace(None, clock=clock)
+            for ev in trace["traceEvents"]:
+                ev = dict(ev)
+                ev["pid"] = 2 * i + ev["pid"]
+                if ev.get("ph") == "M" and ev.get("name") == "process_name":
+                    ev["args"] = {
+                        "name": f"replica{i}:{ev['args']['name']}"}
+                events.append(ev)
+        merged = {"traceEvents": events, "displayTimeUnit": "ms",
+                  "otherData": {"clock": clock,
+                                "n_replicas": len(self.engines)}}
+        if path is not None:
+            with open(path, "w") as f:
+                json.dump(merged, f, indent=None, separators=(",", ":"))
+        return merged

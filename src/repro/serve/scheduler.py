@@ -275,6 +275,10 @@ class TokenBudgetScheduler:
                   "Speculative draft tokens accepted (emitted)")
         m.counter("sched_spec_rejected_total",
                   "Speculative draft tokens rejected by the verify launch")
+        # SLO-driven priority aging (incremented in pop() at admission)
+        m.counter("sched_priority_boosts_total",
+                  "Admissions whose work-clock-aged effective priority "
+                  "exceeded the submitted priority (priority_aging)")
         m.gauge("sched_queue_depth",
                 "Requests waiting for admission (RESUMING included)")
         m.gauge("sched_queue_depth_by_priority",
@@ -299,6 +303,7 @@ class TokenBudgetScheduler:
     spec_drafted = _registry_counter("sched_spec_drafted_total")
     spec_accepted = _registry_counter("sched_spec_accepted_total")
     spec_rejected = _registry_counter("sched_spec_rejected_total")
+    priority_boosts = _registry_counter("sched_priority_boosts_total")
 
     # -- queue / admission policy -----------------------------------------
     def submit(self, req: Request):
@@ -313,18 +318,40 @@ class TokenBudgetScheduler:
         within its priority class a victim resumes ahead of newcomers."""
         self.queue.append(req)
 
+    def effective_priority(self, req: Request) -> int:
+        """Priority used for ADMISSION ORDERING.  With priority_aging on,
+        a queued (or preempted-and-parked) request gains +1 effective
+        priority for every priority_age_tokens of work-clock age since it
+        was submitted, so a low-priority request's wait is bounded: after
+        (gap * priority_age_tokens) tokens of engine work it outranks any
+        higher class and becomes the admission head.  Deterministic by
+        construction - age is measured on the work clock, not wall time.
+        Aging deliberately does NOT feed the preemption policy: an aged
+        request admits ahead of newcomers but never evicts running work
+        (base priority keeps preempt/victim cycles impossible)."""
+        if not self.scfg.priority_aging:
+            return req.priority
+        age = self.work_clock - req.w_submit
+        return req.priority + age // self.scfg.priority_age_tokens
+
     def peek(self) -> Optional[Request]:
-        """Next admission candidate: highest priority first, then the
-        configured policy within the class - SJF picks the shortest
+        """Next admission candidate: highest EFFECTIVE priority first
+        (base priority, work-clock-aged when priority_aging is on), then
+        the configured policy within the class - SJF picks the shortest
         remaining prefill (stable on arrival order); FIFO the oldest."""
         if not self.queue:
             return None
         if self.scfg.admission_policy == "sjf":
             return min(self.queue,
-                       key=lambda r: (-r.priority, len(r.target), r.uid))
-        return min(self.queue, key=lambda r: (-r.priority, r.uid))
+                       key=lambda r: (-self.effective_priority(r),
+                                      len(r.target), r.uid))
+        return min(self.queue,
+                   key=lambda r: (-self.effective_priority(r), r.uid))
 
     def pop(self, req: Request):
+        if self.scfg.priority_aging \
+                and self.effective_priority(req) > req.priority:
+            self.priority_boosts += 1
         self.queue.remove(req)
 
     def queue_depth_by_priority(self) -> Dict[str, int]:
@@ -583,6 +610,7 @@ class TokenBudgetScheduler:
             if self.spec_drafted else 0.0,
             "spec_chain_accept_mean":
             self.metrics.get("sched_spec_chain_accept_ratio").mean,
+            "priority_boosts": self.priority_boosts,
             "queue_depth": len(self.queue),
             "queue_depth_by_priority": depth_by_prio,
             "max_tick_tokens": max(per_tick) if per_tick else 0,

@@ -271,6 +271,77 @@ def test_engine_eviction_churn_parity(rng):
 
 
 # ===========================================================================
+# peek: the read-only lookup the fleet router probes with
+# ===========================================================================
+
+def _all_nodes(tree):
+    out, stack = [], [tree.root]
+    while stack:
+        nd = stack.pop()
+        out.append(nd)
+        stack.extend(nd.children.values())
+    return out
+
+
+def test_peek_returns_match_result_without_any_side_effect():
+    """peek must return exactly what match would - and leave NOTHING
+    behind: no LRU stamp bumps, no tree-clock advance, no refcount
+    changes, no lookup/hit counters, no events.  The fleet router peeks
+    every replica per submit; a probe that perturbed LRU order or
+    hit-rate accounting on the N-1 losing replicas would skew both
+    eviction and metrics."""
+    alloc, tree = _tree(ps=2)
+    alloc.alloc(0, 2)
+    tree.release(0, [1, 2, 3, 4])
+    alloc.alloc(0, 2)
+    tree.release(0, [5, 6, 7, 8])
+    events = []
+    tree.event_cb = lambda name, **kw: events.append(name)
+    want = tree.match([1, 2, 3, 4])     # bump: [5,6,7,8] is now the LRU
+    events.clear()
+    clock0 = tree._clock
+    stamps0 = [(id(nd), nd.last_used) for nd in _all_nodes(tree)]
+    refs0 = {p: alloc.refcount(p) for p in tree._pages}
+    metrics0 = tree.metrics.snapshot()
+    # peek agrees with match on hits, partial hits, and misses...
+    assert tree.peek([1, 2, 3, 4]) == want
+    assert tree.peek([5, 6, 7, 8]) == tree._walk([5, 6, 7, 8], touch=False)
+    assert len(tree.peek([5, 6, 7, 8])) == 2
+    assert tree.peek([5, 6, 9, 9]) == tree.peek([5, 6, 7, 8])[:1]
+    assert tree.peek([9, 9, 9, 9]) == []
+    assert tree.peek([1]) == []         # shorter than one page
+    # ... and none of it left a trace
+    assert tree._clock == clock0, "peek advanced the LRU clock"
+    assert [(id(nd), nd.last_used) for nd in _all_nodes(tree)] == stamps0, \
+        "peek reordered LRU stamps"
+    assert {p: alloc.refcount(p) for p in tree._pages} == refs0, \
+        "peek touched refcounts"
+    assert tree.metrics.snapshot() == metrics0, \
+        "peek recorded lookup/hit metrics"
+    assert events == [], "peek emitted trace events"
+    tree.check_invariants()
+
+
+def test_peek_does_not_change_eviction_order():
+    """Hammering peek at one cached prompt must not rescue it from LRU
+    eviction: evict still takes the least-recently-MATCHED prompt, even
+    if it was the most-recently-peeked one."""
+    alloc, tree = _tree(ps=2)
+    alloc.alloc(0, 2)
+    tree.release(0, [1, 2, 3, 4])
+    alloc.alloc(0, 2)
+    tree.release(0, [5, 6, 7, 8])
+    kept = tree.match([1, 2, 3, 4])     # [5,6,7,8] is now the LRU tail
+    for _ in range(25):
+        assert len(tree.peek([5, 6, 7, 8])) == 2
+    assert tree.evict(2) == 2
+    assert tree.match([5, 6, 7, 8]) == [], \
+        "peeks rescued the LRU victim - peek is not side-effect-free"
+    assert tree.match([1, 2, 3, 4]) == kept
+    tree.check_invariants()
+
+
+# ===========================================================================
 # allocator guard rails
 # ===========================================================================
 

@@ -146,6 +146,66 @@ def replay(eng: ServeEngine, items: Sequence[TrafficItem],
     return {r.uid: r.out_tokens for r in done}, done
 
 
+def replay_fleet(router, items: Sequence[TrafficItem],
+                 max_ticks: int = 50_000, check: bool = True
+                 ) -> Tuple[Dict[int, List[int]], List[Request]]:
+    """Drive a FleetRouter through a timed-arrival trace - the fleet
+    analog of replay().  Submits each item at its arrival tick (the
+    router scores and places it), ticks the whole fleet until it drains,
+    and - with `check` (default) - runs FleetRouter.check_invariants()
+    after EVERY tick, which sweeps every replica's engine invariants
+    (allocator refcount conservation, block-table mirroring, prefix-tree
+    consistency) plus the router's placement/dispatch accounting.  After
+    the drain it asserts cross-replica page conservation
+    (assert_fleet_pages_drained).  Returns ({fleet uid: out_tokens},
+    finished Requests in completion order) - fleet uids are issued in
+    submit order, so the same trace keys identically through any fleet
+    size, which is what the 1-vs-N differential tests compare on."""
+    pending_q = sorted(items, key=lambda it: it.tick)
+    done: List[Request] = []
+    tick = 0
+    while pending_q or not router.idle:
+        while pending_q and pending_q[0].tick <= tick:
+            item = pending_q.pop(0)
+            item.uid = router.submit(item.prompt,
+                                     max_new_tokens=item.max_new,
+                                     stop_tokens=item.stop_tokens,
+                                     priority=item.priority)
+        done.extend(router.tick())
+        if check:
+            router.check_invariants()
+        tick += 1
+        if tick >= max_ticks:
+            pending = sum(len(e.queue) for e in router.engines)
+            flight = sum(sum(s is not None for s in e.slots)
+                         for e in router.engines)
+            raise RuntimeError(
+                f"replay_fleet: {max_ticks} ticks exhausted with "
+                f"{len(pending_q)} unsubmitted, {pending} queued, "
+                f"{flight} in flight")
+    if check:
+        assert_fleet_pages_drained(router)
+    return {r.fleet_uid: r.out_tokens for r in done}, done
+
+
+def assert_fleet_pages_drained(router):
+    """Cross-replica page conservation after a drained trace: every
+    replica's pool holds ONLY its prefix tree's pages (or nothing with
+    caching off) - page pools are strictly per-replica, so a page leaked
+    on one replica cannot be hidden by headroom on another."""
+    for i, eng in enumerate(router.engines):
+        if not eng.paged:
+            continue
+        assert all(s is None for s in eng.slots), \
+            f"replica {i} still holds in-flight slots"
+        cached = eng.prefix.cached_pages if eng.prefix is not None else 0
+        assert eng.allocator.used_pages == cached, \
+            (f"replica {i}: {eng.allocator.used_pages} pages in use vs "
+             f"{cached} cached - pages leaked or double-freed")
+        if eng.prefix is not None:
+            eng.prefix.check_invariants()
+
+
 def assert_greedy_equivalent(model, params, done, want: Dict[int, List[int]],
                              tol: float = 2e-3):
     """Assert a run's outputs match the oracle's, tolerating only genuine
@@ -163,9 +223,11 @@ def assert_greedy_equivalent(model, params, done, want: Dict[int, List[int]],
     suite a per-process coin flip."""
     import jax.numpy as jnp
 
-    got = {r.uid: r.out_tokens for r in done}
+    # fleet runs key by the router-issued fleet uid (replica-local uids
+    # collide across replicas); single-engine runs fall back to req.uid
+    got = {getattr(r, "fleet_uid", r.uid): r.out_tokens for r in done}
     assert got.keys() == want.keys()
-    by_uid = {r.uid: r for r in done}
+    by_uid = {getattr(r, "fleet_uid", r.uid): r for r in done}
     for uid, toks in got.items():
         if toks == want[uid]:
             continue
