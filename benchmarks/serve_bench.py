@@ -856,6 +856,136 @@ def run_default_trace(args, out_json):
     return rows
 
 
+# ===========================================================================
+# chaos trace (kill 1 of N replicas mid-trace; latency cost of recovery)
+# ===========================================================================
+
+def make_chaos_trace(rng, vocab, lens, requests, spread):
+    """Timed-arrival mixed trace: `requests` prompts cycling `lens`,
+    arrival ticks spread over [0, spread]."""
+    arrivals = []
+    for i in range(requests):
+        n = lens[i % len(lens)]
+        arrivals.append((int(rng.integers(0, spread + 1)),
+                         rng.integers(1, vocab, size=n).tolist()))
+    arrivals.sort(key=lambda a: a[0])
+    return arrivals
+
+
+def run_chaos_mode(model, params, scfg, fcfg, arrivals, max_new,
+                   kill_tick=None, victim=None):
+    """Serve a timed-arrival trace through the fleet, optionally killing
+    `victim` at fleet tick `kill_tick`.  TTFT is measured in FLEET TICKS
+    (first-token tick minus submit tick) - the one clock that spans a
+    redispatch, since per-engine work clocks restart on the survivor.
+    Asserts router invariants every tick and that every request
+    completes."""
+    router = FleetRouter(model, params, scfg, fcfg)
+    pending = list(arrivals)
+    submit_tick, first_tok = {}, {}
+    done = []
+    t0 = time.time()
+    tick = 0
+    while pending or not router.idle:
+        if kill_tick is not None and tick == kill_tick:
+            router.fail(victim)
+        while pending and pending[0][0] <= tick:
+            _, prompt = pending.pop(0)
+            uid = router.submit(prompt, max_new_tokens=max_new)
+            submit_tick[uid] = tick
+        done.extend(router.tick())
+        router.check_invariants()
+        for uid, req in router.requests.items():
+            if uid not in first_tok and req.out_tokens:
+                first_tok[uid] = tick
+        tick += 1
+        assert tick < 500_000, "chaos trace did not drain"
+    dt = time.time() - t0
+    statuses = router.statuses()
+    assert set(statuses.values()) == {"done"}, \
+        f"chaos trace left non-done requests: {statuses}"
+    assert len(done) == len(arrivals), (len(done), len(arrivals))
+    ttft = sorted(first_tok[u] - submit_tick[u] for u in submit_tick)
+    st = router.fleet_stats()
+    outs = {u: list(r.out_tokens) for u, r in router.requests.items()}
+    row = {"requests": len(done), "ticks": tick, "seconds": dt,
+           "ttft_ticks_p50": float(np.percentile(ttft, 50)),
+           "ttft_ticks_p95": float(np.percentile(ttft, 95)),
+           "redispatches": st["redispatches"],
+           "failures": st["failures"],
+           "replica_states": st["replica_states"],
+           "dispatch": st["dispatch"]}
+    return outs, row, router
+
+
+def run_chaos_trace(args, out_json):
+    """Kill 1 of N replicas mid-trace and price the recovery: the same
+    timed-arrival trace runs fault-free and with a kill at --kill-tick,
+    and the bench asserts (a) every request still completes, (b) greedy
+    outputs are bit-identical to the fault-free run - replica death is
+    invisible in the tokens - and (c) the p95 first-token latency (in
+    fleet ticks, the clock that spans a redispatch) inflates by at most
+    --chaos-ttft-bound x.  The latency cost of fault tolerance is the
+    headline number; the conformance is the contract."""
+    cfg = get_smoke_config(args.arch).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = args.chaos_replicas
+    rng = np.random.default_rng(0)
+    arrivals = make_chaos_trace(rng, cfg.vocab_size, args.lens,
+                                args.requests * 2, spread=4)
+    scfg = ServeConfig(max_batch=args.max_batch, max_seq=args.max_seq,
+                       max_new_tokens=args.max_new, paged=True,
+                       page_size=args.page_size, chunked=True,
+                       batched=True, prefix_cache=True,
+                       prefill_chunk=args.prefill_chunk,
+                       tick_token_budget=args.tick_budget
+                       or args.max_batch + 2 * args.prefill_chunk)
+    fcfg = FleetConfig(n_replicas=n)
+    print(f"# arch={cfg.name} replicas={n} requests={len(arrivals)} "
+          f"lens={args.lens} max_new={args.max_new} "
+          f"kill_tick={args.kill_tick} victim={args.victim}")
+    print("mode,requests,ticks,ttft_ticks_p50,ttft_ticks_p95,"
+          "redispatches,dispatch")
+    rows = {}
+    base_out, rows["fault_free"], _ = run_chaos_mode(
+        model, params, scfg, fcfg, arrivals, args.max_new)
+    chaos_out, rows["kill_one"], router = run_chaos_mode(
+        model, params, scfg, fcfg, arrivals, args.max_new,
+        kill_tick=args.kill_tick, victim=args.victim)
+    for key in ("fault_free", "kill_one"):
+        r = rows[key]
+        print(f"{key},{r['requests']},{r['ticks']},"
+              f"{r['ttft_ticks_p50']:.1f},{r['ttft_ticks_p95']:.1f},"
+              f"{r['redispatches']},\"{r['dispatch']}\"")
+    assert chaos_out == base_out, \
+        "kill-one run changed greedy outputs vs the fault-free run"
+    assert rows["kill_one"]["failures"] == 1
+    assert rows["kill_one"]["redispatches"] > 0, \
+        "the kill moved no requests - pick an earlier --kill-tick"
+    p95_base = max(rows["fault_free"]["ttft_ticks_p95"], 1.0)
+    p95_chaos = rows["kill_one"]["ttft_ticks_p95"]
+    inflation = p95_chaos / p95_base
+    bound = args.chaos_ttft_bound
+    print(f"# p95 first-token latency: {p95_base:.1f} -> {p95_chaos:.1f} "
+          f"ticks ({inflation:.2f}x, bound {bound:.1f}x); "
+          f"{rows['kill_one']['redispatches']} requests redispatched")
+    assert inflation <= bound, \
+        f"p95 TTFT inflated {inflation:.2f}x > bound {bound:.1f}x"
+    rows["chaos_summary"] = {
+        "identical_greedy_outputs": True,
+        "all_requests_completed": True,
+        "ttft_ticks_p95_inflation": inflation,
+        "ttft_ticks_p95_bound": bound,
+        "redispatches": rows["kill_one"]["redispatches"],
+        "kill_tick": args.kill_tick, "victim": args.victim,
+        "n_replicas": n}
+    if out_json:
+        Path(out_json).write_text(json.dumps(rows, indent=2))
+        print(f"# wrote {out_json}")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b")
@@ -895,6 +1025,24 @@ def main(argv=None):
                          "prefill tokens than round-robin, both asserted")
     ap.add_argument("--replicas", type=int, nargs="+", default=[1, 2, 4],
                     help="fleet trace: replica counts to sweep")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fault-tolerance trace: the same timed-arrival "
+                         "mixed trace through an N-replica fleet fault-"
+                         "free and with 1 replica killed mid-trace; "
+                         "asserts every request completes, outputs are "
+                         "bit-identical to the fault-free run, and p95 "
+                         "first-token latency inflates by at most "
+                         "--chaos-ttft-bound x")
+    ap.add_argument("--chaos-replicas", type=int, default=4,
+                    help="chaos trace: fleet size (1 replica dies)")
+    ap.add_argument("--kill-tick", type=int, default=4,
+                    help="chaos trace: fleet tick at which the victim "
+                         "replica is killed")
+    ap.add_argument("--victim", type=int, default=1,
+                    help="chaos trace: replica index to kill")
+    ap.add_argument("--chaos-ttft-bound", type=float, default=3.0,
+                    help="chaos trace: max allowed p95 first-token "
+                         "latency inflation (kill-one / fault-free)")
     ap.add_argument("--preempt-trace", action="store_true",
                     help="decode-priority shaping (decode p95 TBT with vs "
                          "without the prefill-share cap under a prefill "
@@ -947,6 +1095,8 @@ def main(argv=None):
         rows = run_chunked_trace(args, args.json)
     elif args.fleet:
         rows = run_fleet_trace(args, args.json)
+    elif args.chaos:
+        rows = run_chaos_trace(args, args.json)
     elif args.speculative:
         rows = run_spec_trace(args, args.json)
     elif args.preempt_trace:

@@ -310,6 +310,18 @@ class ServeConfig:
     # admission would otherwise run out of pages)
     prefix_evict_watermark: float = 0.0
 
+    # --- request deadlines (serve/scheduler.py + serve/engine.py) -----------
+    # Default per-request deadline in WORK-CLOCK tokens (0 = no deadline).
+    # A request whose work-clock age (engine work executed since its
+    # submit) reaches its deadline before it finishes is expired with a
+    # TIMEOUT status at the top of the next tick: its slot and pages are
+    # freed (valid prefix pages publish into the prefix cache, exactly
+    # like preemption) the same tick, so an expired request can never hang
+    # the engine or strand capacity.  Per-request submit(deadline=...)
+    # overrides this default; deadlines are deterministic because the work
+    # clock is.
+    default_deadline_tokens: int = 0
+
     # --- telemetry (serve/telemetry.py) -------------------------------------
     # The metrics registry is ALWAYS on - it is the typed backing store of
     # engine.stats() / scheduler.stats() and costs a handful of host-side
@@ -387,6 +399,10 @@ class ServeConfig:
             if self.spec_ngram < 1:
                 raise ValueError(f"spec_ngram must be >= 1, "
                                  f"got {self.spec_ngram}")
+        if self.default_deadline_tokens < 0:
+            raise ValueError(
+                f"default_deadline_tokens must be >= 0 (0 = no deadline), "
+                f"got {self.default_deadline_tokens}")
         if self.telemetry_spans < 1:
             raise ValueError(f"telemetry_spans must be >= 1, "
                              f"got {self.telemetry_spans}")

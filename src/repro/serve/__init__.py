@@ -3,7 +3,7 @@ from .engine import ServeEngine
 from .paged_cache import (OutOfPages, PageAllocator, dense_kv_bytes,
                           paged_kv_bytes, pages_needed)
 from .prefix_cache import RadixPrefixCache
-from .router import FleetConfig, FleetRouter
+from .router import FleetConfig, FleetRouter, ReplicaState
 from .sampling import (apply_top_k, apply_top_p, sample, sample_chain,
                        speculative_accept)
 from .scheduler import (ChunkBatch, ChunkTask, DraftTask, Request,
@@ -22,7 +22,8 @@ from .telemetry import (Counter, Gauge, Histogram, LaunchRecord,
 __all__ = ["ChunkBatch", "ChunkTask", "Counter", "DraftTask", "FleetConfig",
            "FleetRouter", "Gauge",
            "Histogram", "LaunchRecord", "MetricError", "MetricsRegistry",
-           "OutOfPages", "PageAllocator", "RadixPrefixCache", "Request",
+           "OutOfPages", "PageAllocator", "RadixPrefixCache", "ReplicaState",
+           "Request",
            "RequestState", "ServeEngine", "Span", "SpanTracer", "SpecBatch",
            "Telemetry", "TickRecord", "TokenBudgetScheduler", "TraceEvent",
            "apply_top_k", "apply_top_p", "bucket_rows", "dense_kv_bytes",

@@ -310,6 +310,10 @@ class ServeEngine:
         self._key = jax.random.PRNGKey(scfg.seed)
         self._dummy_key = jax.random.PRNGKey(0)   # greedy: key arg unused
         self._finished_this_tick: List[Request] = []
+        # set the first time a submit carries a deadline: the per-tick
+        # expiry sweep is a no-op until then (deadline-free traffic pays
+        # one boolean check per tick)
+        self._deadlines_active = False
         self._table_dirty = False    # device block table behind the host's
         # host mirror of `lens`: every host-side decision that needs
         # lengths (COW guard, bookkeeping) reads this instead of syncing
@@ -460,21 +464,47 @@ class ServeEngine:
     def submit(self, prompt: List[int],
                max_new_tokens: Optional[int] = None,
                stop_tokens: Optional[Sequence[int]] = None,
-               priority: int = 0) -> int:
+               priority: int = 0,
+               deadline: Optional[int] = None,
+               max_retries: Optional[int] = None) -> int:
         """Enqueue a request.  Everything that can never be served -
         empty prompt, zero generation budget, overflowing max_seq, a page
-        reservation larger than the engine can ever grant - fails HERE
-        with a clear error instead of deep inside prefill or the
-        allocator.  `stop_tokens` (merged with ServeConfig.eos_id) end
-        generation early the tick one is produced.  Higher `priority`
-        admits first and - with ServeConfig.preemption - may preempt
-        running lower-priority requests when the page pool runs dry."""
+        reservation larger than the engine can ever grant, a deadline the
+        prompt's own prefill would already blow - fails HERE with a clear
+        error instead of deep inside prefill or the allocator.
+        `stop_tokens` (merged with ServeConfig.eos_id) end generation
+        early the tick one is produced.  Higher `priority` admits first
+        and - with ServeConfig.preemption - may preempt running
+        lower-priority requests when the page pool runs dry.  `deadline`
+        is a per-request work-clock deadline in tokens (default:
+        ServeConfig.default_deadline_tokens; 0/None = none): once the
+        engine has executed that much work since the submit the request
+        expires with a TIMEOUT status, pages freed the same tick.
+        `max_retries` caps how many times a fleet router may redispatch
+        the request off a failed replica (None = unbounded)."""
         n_new = self.scfg.max_new_tokens if max_new_tokens is None \
             else max_new_tokens
         if not prompt:
             raise ValueError("empty prompt")
         if n_new < 1:
             raise ValueError(f"max_new_tokens must be >= 1, got {n_new}")
+        if deadline is None:
+            deadline = self.scfg.default_deadline_tokens or None
+        if deadline is not None:
+            if deadline <= 0:
+                raise ValueError(f"deadline must be >= 1 work token, "
+                                 f"got {deadline}")
+            if deadline <= len(prompt):
+                # the prompt alone costs len(prompt) work tokens of
+                # prefill before the first token can exist: a smaller
+                # deadline is a guaranteed timeout - reject it at submit
+                raise ValueError(
+                    f"deadline ({deadline}) is not above the prompt's "
+                    f"minimum prefill work ({len(prompt)} tokens): the "
+                    f"request could never produce a token in time")
+        if max_retries is not None and max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0 (None = "
+                             f"unbounded), got {max_retries}")
         if len(prompt) + n_new > self.scfg.max_seq:
             raise ValueError(
                 f"request does not fit: {len(prompt)} prompt + {n_new} new "
@@ -496,7 +526,10 @@ class ServeEngine:
             stops = stops | {self.scfg.eos_id}
         self._uid += 1
         req = Request(self._uid, list(prompt), n_new, stop_tokens=stops,
-                      priority=int(priority))
+                      priority=int(priority), deadline_tokens=deadline,
+                      max_retries=max_retries)
+        if deadline is not None:
+            self._deadlines_active = True
         self.sched.submit(req)
         self.tm.registry.get("serve_requests_submitted_total").inc()
         self._phase(req, "QUEUED", TRACK_QUEUE,
@@ -708,6 +741,78 @@ class ServeEngine:
         self._phase(req, "DONE", i, reason=req.finish_reason,
                     out_tokens=len(req.out_tokens))
         self._finished_this_tick.append(req)
+
+    def _expire(self, req: Request):
+        """Deadline timeout: take the request out of the engine - queued,
+        prefilling, or decoding - and free everything it held THE SAME
+        TICK.  A slot-holding request frees exactly like a preemption
+        victim (only fully-valid positions publish into the prefix tree:
+        prefill_pos while prefilling, the lens mirror while decoding;
+        without a prefix cache the slot's pages simply return to the
+        pool), so an expired request can never strand capacity or corrupt
+        page accounting.  Finishes with state TIMEOUT / finish_reason
+        "timeout" and surfaces through the tick's finished list like any
+        completion - a deadline bounds latency, it never hangs."""
+        i = req.slot
+        if i is not None:
+            if self.prefix is not None:
+                if req.state is RequestState.PREFILLING:
+                    n_valid = req.prefill_pos
+                    seq = list(req.target)
+                else:
+                    seq = req.prompt + list(req.out_tokens)
+                    n_valid = int(self._lens_np[i])
+                self.prefix.release(i, seq[:n_valid])
+            elif self.paged:
+                self.allocator.free_slot(i)
+            self.slots[i] = None
+            self.lens = self.lens.at[i].set(0)
+            self._lens_np[i] = 0
+            req.slot = None
+            if self.paged:
+                self._table_dirty = True
+        else:
+            self.sched.queue.remove(req)
+        req.state = RequestState.TIMEOUT
+        req.done = True
+        req.finish_reason = "timeout"
+        self.sched.timeouts += 1
+        self.sched.note_finished(req)
+        self._phase(req, "TIMEOUT", i if i is not None else TRACK_QUEUE,
+                    out_tokens=len(req.out_tokens))
+        self._finished_this_tick.append(req)
+
+    def _expire_deadlines(self):
+        """Top-of-tick deadline sweep (both tick flavors): expire every
+        request - queued or in flight - whose work-clock age reached its
+        deadline.  The scheduler owns the predicate (sched.expired); the
+        engine owns the page/slot consequences.  Sweeping BEFORE admission
+        and planning means a request never does work in the tick it
+        expires, and the pages it frees are immediately admissible."""
+        if not self._deadlines_active:
+            return
+        expired = [r for r in self.sched.queue if self.sched.expired(r)]
+        expired += [r for r in self.slots
+                    if r is not None and self.sched.expired(r)]
+        for r in expired:
+            self._expire(r)
+
+    def request_statuses(self) -> Dict[int, str]:
+        """{uid: state} for every request this engine has ever accepted:
+        terminal ("done" / "timeout" / "failed") or still-live ("queued" /
+        "prefilling" / "decoding" / "resuming").  Built from the three
+        places a request can be - finished list, admission queue, slots -
+        so nothing is ever silently dropped (the exhaustion-reporting and
+        chaos suites assert on exactly this view)."""
+        out: Dict[int, str] = {}
+        for r in self.sched.finished:
+            out[r.uid] = r.state.value
+        for r in self.queue:
+            out[r.uid] = r.state.value
+        for r in self.slots:
+            if r is not None:
+                out[r.uid] = r.state.value
+        return out
 
     def _sync_table(self):
         """Upload the block table, MASKING rows of slots that are not yet
@@ -1457,6 +1562,7 @@ class ServeEngine:
         (jit_calls, host_syncs, host_wall_s, n_chunk_tasks, n_decode)."""
         self._finished_this_tick = []
         self._tick_profile = (0, 0)
+        self._expire_deadlines()
         j0, s0 = self.jit_calls, self.host_syncs
         tick0 = self.sched.ticks
         work0 = self.sched.work_clock

@@ -93,6 +93,11 @@ class PageAllocator:
         self.max_pages_per_seq = pages_needed(max_seq, page_size)
         # LIFO free list; page 0 stays reserved forever
         self._free: List[int] = list(range(self.usable_pages, 0, -1))
+        # fault-injection hook: pages withheld from circulation by
+        # quarantine() (deterministic page-pool-exhaustion chaos).  They
+        # are neither free nor referenced - check_invariants accounts for
+        # them explicitly, so invariants stay assertable mid-fault.
+        self._quarantined: List[int] = []
         self._refs = np.zeros(num_pages, np.int32)
         self._slot_pages: List[List[int]] = [[] for _ in range(max_batch)]
         self.table = np.zeros((max_batch, self.max_pages_per_seq), np.int32)
@@ -118,7 +123,7 @@ class PageAllocator:
 
     def _note_pool(self):
         self._m_free_g.set(len(self._free))
-        self._m_used_g.set(self.usable_pages - len(self._free))
+        self._m_used_g.set(self.used_pages)
 
     # -- queries ----------------------------------------------------------
     @property
@@ -127,7 +132,11 @@ class PageAllocator:
 
     @property
     def used_pages(self) -> int:
-        return self.usable_pages - len(self._free)
+        return self.usable_pages - len(self._free) - len(self._quarantined)
+
+    @property
+    def quarantined_pages(self) -> int:
+        return len(self._quarantined)
 
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
@@ -224,6 +233,29 @@ class PageAllocator:
         self.table[slot, :] = 0
         return pages
 
+    def quarantine(self, n: int) -> int:
+        """Withhold up to `n` FREE pages from circulation (returns how many
+        were actually taken).  The deterministic page-pool-exhaustion
+        fault: admission sees a smaller free list and backpressures (or
+        preempts) exactly as under real pressure, while the pages - never
+        referenced, never free - stay fully accounted in
+        check_invariants.  Referenced pages are never touched, so no
+        in-flight KV is ever yanked."""
+        take = min(n, len(self._free))
+        for _ in range(take):
+            self._quarantined.append(self._free.pop())
+        self._note_pool()
+        return take
+
+    def release_quarantine(self) -> int:
+        """Return every quarantined page to the free list (fault over);
+        returns how many came back."""
+        n = len(self._quarantined)
+        while self._quarantined:
+            self._free.append(self._quarantined.pop())
+        self._note_pool()
+        return n
+
     def table_device(self) -> jnp.ndarray:
         """The block table as a device array (upload is max_batch * n_max
         int32s - trivial next to one decode step).  The host mirror is
@@ -246,6 +278,12 @@ class PageAllocator:
         free = set(self._free)
         assert len(free) == len(self._free), "duplicate page in free list"
         assert 0 not in free, "null page on the free list"
+        quarantined = set(self._quarantined)
+        assert len(quarantined) == len(self._quarantined), \
+            "duplicate page in quarantine"
+        assert not quarantined & free, "page both free and quarantined"
+        assert all(int(self._refs[p]) == 0 for p in quarantined), \
+            "referenced page in quarantine"
         counts: dict = {}
         for lst in self._slot_pages:
             for p in lst:
@@ -257,6 +295,8 @@ class PageAllocator:
             r = int(self._refs[p])
             assert r == counts.get(p, 0), \
                 f"page {p}: refcount {r} != holders {counts.get(p, 0)}"
+            if p in quarantined:
+                continue                 # checked above: refcount 0, not free
             if p <= self.usable_pages:
                 assert (p in free) == (r == 0), \
                     f"page {p} both free and referenced (refs {r})"
@@ -271,8 +311,10 @@ class PageAllocator:
                 f"slot {slot}: stale table entries past its page list"
         referenced = sum(1 for p in range(1, self.num_pages)
                          if self._refs[p] > 0)
-        assert len(free) + referenced == self.usable_pages, \
+        assert len(free) + referenced + len(quarantined) \
+            == self.usable_pages, \
             f"page conservation violated: {len(free)} free + {referenced} " \
-            f"referenced != {self.usable_pages} usable"
+            f"referenced + {len(quarantined)} quarantined " \
+            f"!= {self.usable_pages} usable"
         assert all(p <= self.usable_pages for p in free), \
             "page beyond the usable cap on the free list"

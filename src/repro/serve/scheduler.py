@@ -78,6 +78,14 @@ class RequestState(str, Enum):
     DECODING = "decoding"        # prompt complete, generating tokens
     RESUMING = "resuming"        # preempted: re-queued, pages shed, waiting
     DONE = "done"                # finished (length / stop token)
+    TIMEOUT = "timeout"          # expired: work-clock deadline reached
+    FAILED = "failed"            # terminal: redispatch retry budget spent
+
+
+# the states a request can never leave (DONE / TIMEOUT / FAILED); anything
+# else is still live - queued, in flight, or parked for resume
+TERMINAL_STATES = frozenset((RequestState.DONE, RequestState.TIMEOUT,
+                             RequestState.FAILED))
 
 
 @dataclass
@@ -94,7 +102,17 @@ class Request:
     # prompt tokens already resident in the KV cache (cached prefix +
     # chunks prefilled so far); the request's prefill cursor
     prefill_pos: int = 0
-    finish_reason: str = ""      # "length" | "stop"
+    finish_reason: str = ""      # "length" | "stop" | "timeout" | "failed"
+    # --- deadlines / fault tolerance -------------------------------------
+    # work-clock deadline: the request expires (TIMEOUT) once the engine
+    # has executed this many work tokens since its submit (None = never).
+    # Deterministic by construction - the work clock is.
+    deadline_tokens: Optional[int] = None
+    # redispatch retry budget (fleet-level): how many times the router may
+    # move this request off a failed replica before it goes terminal
+    # FAILED (None = unbounded)
+    max_retries: Optional[int] = None
+    n_redispatches: int = 0
     # --- preemption ------------------------------------------------------
     # monotone admission stamp (engine-issued): the preemption policy sheds
     # the most recently admitted PREFILLING victim first
@@ -275,6 +293,11 @@ class TokenBudgetScheduler:
                   "Speculative draft tokens accepted (emitted)")
         m.counter("sched_spec_rejected_total",
                   "Speculative draft tokens rejected by the verify launch")
+        # request deadlines (the engine expires through expired(); the
+        # counter advances once per expired request)
+        m.counter("sched_timeouts_total",
+                  "Requests expired by their work-clock deadline (finished "
+                  "with TIMEOUT status, pages freed the same tick)")
         # SLO-driven priority aging (incremented in pop() at admission)
         m.counter("sched_priority_boosts_total",
                   "Admissions whose work-clock-aged effective priority "
@@ -304,6 +327,7 @@ class TokenBudgetScheduler:
     spec_accepted = _registry_counter("sched_spec_accepted_total")
     spec_rejected = _registry_counter("sched_spec_rejected_total")
     priority_boosts = _registry_counter("sched_priority_boosts_total")
+    timeouts = _registry_counter("sched_timeouts_total")
 
     # -- queue / admission policy -----------------------------------------
     def submit(self, req: Request):
@@ -317,6 +341,17 @@ class TokenBudgetScheduler:
         preempt/resume - and its uid keeps its original FIFO position, so
         within its priority class a victim resumes ahead of newcomers."""
         self.queue.append(req)
+
+    def expired(self, req: Request) -> bool:
+        """Deadline check, in the deterministic work clock: True once the
+        engine has executed `deadline_tokens` work tokens since the
+        request's submit without it finishing.  The ENGINE sweeps with
+        this at the top of every tick and frees the expired request's slot
+        and pages the same tick - a deadline can bound latency but never
+        hang or strand capacity."""
+        return (req.deadline_tokens is not None
+                and not req.done
+                and self.work_clock - req.w_submit >= req.deadline_tokens)
 
     def effective_priority(self, req: Request) -> int:
         """Priority used for ADMISSION ORDERING.  With priority_aging on,
@@ -611,6 +646,7 @@ class TokenBudgetScheduler:
             "spec_chain_accept_mean":
             self.metrics.get("sched_spec_chain_accept_ratio").mean,
             "priority_boosts": self.priority_boosts,
+            "timeouts": self.timeouts,
             "queue_depth": len(self.queue),
             "queue_depth_by_priority": depth_by_prio,
             "max_tick_tokens": max(per_tick) if per_tick else 0,

@@ -1,0 +1,225 @@
+"""Deterministic fault-injection (chaos) harness for the fleet router.
+
+Extends the traffic-replay harness (tests/traffic.py) with a seeded,
+replayable fault schedule: a FaultPlan names exactly WHICH fault hits
+WHICH replica at WHICH fleet tick, so every chaos scenario is a plain
+deterministic test - no wall-clock, no racing threads, no flaky sleeps.
+The fault vocabulary covers the failure modes the router's lifecycle
+machinery exists for:
+
+  kill           replica declared DEAD (FleetRouter.fail): queued and
+                 in-flight requests redispatch to survivors through the
+                 resume path
+  drain          replica stops taking new work and empties in place
+  undrain        drained replica rejoins dispatch rotation
+  stuck          the replica's tick() is stubbed to a no-op, freezing its
+                 work clock while it still holds work - the shape the
+                 tick watchdog exists to catch (requires
+                 FleetConfig.watchdog_ticks > 0 to self-heal)
+  unstick        restore the stubbed tick()
+  pool_squeeze   quarantine N free pages in the replica's allocator
+                 (sanctioned exhaustion: invariants stay assertable)
+  pool_restore   release every quarantined page back to the pool
+
+replay_fleet_chaos() drives a fleet through a timed-arrival trace while
+applying the plan, asserting the full invariant suite EVERY tick:
+router/engine invariants on survivors, per-replica work-clock
+monotonicity, and no duplicated terminal requests.  After the drain it
+asserts the request ledger is complete (every submitted fleet uid went
+terminal - done, timeout, or failed; nothing lost) and page conservation
+on survivors.  Conformance on top of that is the caller's one-liner:
+assert_chaos_conformance() checks every request that finished DONE
+produced output identical to a fault-free run of the same trace.
+"""
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.router import FleetRouter, ReplicaState
+from repro.serve.scheduler import Request, TERMINAL_STATES
+from traffic import (TrafficItem, assert_fleet_pages_drained,
+                     assert_greedy_equivalent)
+
+FAULT_KINDS = ("kill", "drain", "undrain", "stuck", "unstick",
+               "pool_squeeze", "pool_restore")
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One scheduled fault: `kind` hits `replica` at fleet tick `tick`
+    (applied just before that tick runs).  `pages` only matters for
+    pool_squeeze (how many free pages to quarantine)."""
+    tick: int
+    kind: str
+    replica: int
+    pages: int = 0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {FAULT_KINDS}")
+
+
+@dataclass
+class FaultPlan:
+    """A deterministic fault schedule.  Faults apply in (tick, list
+    order); the same plan over the same trace replays bit-identically."""
+    faults: List[Fault] = field(default_factory=list)
+    seed: Optional[int] = None     # provenance stamp for random plans
+
+    def at_tick(self, tick: int) -> List[Fault]:
+        return [f for f in self.faults if f.tick == tick]
+
+    def max_tick(self) -> int:
+        return max((f.tick for f in self.faults), default=0)
+
+
+def apply_fault(router: FleetRouter, fault: Fault,
+                saved_ticks: Dict[int, Callable]):
+    """Apply one fault to the fleet.  `saved_ticks` carries the original
+    tick() bound methods of stuck replicas so unstick can restore them."""
+    eng = router.engines[fault.replica]
+    if fault.kind == "kill":
+        router.fail(fault.replica)
+    elif fault.kind == "drain":
+        router.drain(fault.replica)
+    elif fault.kind == "undrain":
+        router.undrain(fault.replica)
+    elif fault.kind == "stuck":
+        if fault.replica not in saved_ticks:
+            saved_ticks[fault.replica] = eng.tick
+            eng.tick = lambda: []          # work clock freezes, work stays
+    elif fault.kind == "unstick":
+        orig = saved_ticks.pop(fault.replica, None)
+        if orig is not None:
+            eng.tick = orig
+    elif fault.kind == "pool_squeeze":
+        if eng.paged:
+            eng.allocator.quarantine(fault.pages)
+    elif fault.kind == "pool_restore":
+        if eng.paged:
+            eng.allocator.release_quarantine()
+
+
+def replay_fleet_chaos(router: FleetRouter, items: Sequence[TrafficItem],
+                       plan: FaultPlan, max_ticks: int = 50_000,
+                       check: bool = True
+                       ) -> Tuple[Dict[int, List[int]], List[Request]]:
+    """Drive a FleetRouter through a timed-arrival trace while applying
+    `plan`, asserting the invariant suite after every tick:
+
+      - FleetRouter.check_invariants(): survivor engine invariants
+        (refcount conservation, table mirroring, prefix trees) plus the
+        router's placement/dispatch/redispatch ledger
+      - work-clock monotonicity per live replica (never goes backward)
+      - no duplicated terminal requests (each fleet uid finishes once)
+
+    After the drain: every submitted fleet uid is terminal (done /
+    timeout / failed - no request lost), and survivors' pools hold only
+    their prefix trees' pages.  Returns ({fleet uid: out_tokens},
+    terminal Requests in completion order)."""
+    pending_q = sorted(items, key=lambda it: it.tick)
+    saved_ticks: Dict[int, Callable] = {}
+    done: List[Request] = []
+    seen_terminal: set = set()
+    last_work = [0] * len(router.engines)
+    tick = 0
+    while pending_q or not router.idle or tick <= plan.max_tick():
+        for fault in plan.at_tick(tick):
+            apply_fault(router, fault, saved_ticks)
+        while pending_q and pending_q[0].tick <= tick:
+            item = pending_q.pop(0)
+            item.uid = router.submit(item.prompt,
+                                     max_new_tokens=item.max_new,
+                                     stop_tokens=item.stop_tokens,
+                                     priority=item.priority,
+                                     deadline=item.deadline,
+                                     max_retries=item.max_retries)
+        finished = router.tick()
+        done.extend(finished)
+        if check:
+            router.check_invariants()
+            for fuid in (r.fleet_uid for r in finished):
+                assert fuid not in seen_terminal, \
+                    f"fleet uid {fuid} went terminal twice"
+                seen_terminal.add(fuid)
+            for i, eng in enumerate(router.engines):
+                if router.states[i] is ReplicaState.DEAD:
+                    continue
+                wc = eng.sched.work_clock
+                assert wc >= last_work[i], \
+                    f"replica {i} work clock went backward: " \
+                    f"{last_work[i]} -> {wc}"
+                last_work[i] = wc
+        tick += 1
+        if tick >= max_ticks:
+            raise RuntimeError(
+                f"replay_fleet_chaos: {max_ticks} ticks exhausted; "
+                f"statuses: {router.statuses()}")
+    if check:
+        statuses = router.statuses()
+        stuck = {f: s for f, s in statuses.items()
+                 if router.requests[f].state not in TERMINAL_STATES}
+        assert not stuck, f"requests lost (never terminal): {stuck}"
+        assert_fleet_pages_drained(router)
+    return {r.fleet_uid: list(r.out_tokens) for r in done}, done
+
+
+def assert_chaos_conformance(model, params, router: FleetRouter,
+                             done: List[Request],
+                             baseline: Dict[int, List[int]]):
+    """The chaos differential: every request the faulted fleet finished
+    DONE must have produced output identical to the fault-free baseline
+    run of the same trace (bit-equality fast path, teacher-forced
+    near-tie fallback).  TIMEOUT / FAILED requests are excluded - their
+    contract is clean terminal accounting, not completion."""
+    statuses = router.statuses()
+    done_uids = {f for f, s in statuses.items() if s == "done"}
+    assert done_uids <= baseline.keys(), \
+        f"faulted run finished unknown uids: {done_uids - baseline.keys()}"
+    got = {f: o for f, o in router.outputs().items() if f in done_uids}
+    want = {f: baseline[f] for f in done_uids}
+    if got != want:
+        survivors = [r for r in done if r.fleet_uid in done_uids]
+        assert_greedy_equivalent(model, params, survivors, want)
+    return done_uids
+
+
+def random_fault_plan(seed: int, n_replicas: int, max_tick: int = 20,
+                      n_faults: int = 3,
+                      kinds: Sequence[str] = ("kill", "drain",
+                                              "pool_squeeze"),
+                      squeeze_pages: int = 8) -> FaultPlan:
+    """A seeded random FaultPlan that always leaves at least one replica
+    HEALTHY and never drains/kills the designated survivor - so every
+    soak iteration can complete (the dispatch path always has a target).
+    Kills are permanent; drains get a paired undrain a few ticks later
+    half the time; squeezes always get a paired restore."""
+    rng = np.random.default_rng(seed)
+    survivor = int(rng.integers(0, n_replicas))
+    victims = [i for i in range(n_replicas) if i != survivor]
+    faults: List[Fault] = []
+    dead: set = set()
+    for _ in range(n_faults):
+        kind = str(rng.choice(list(kinds)))
+        pool = [v for v in victims if v not in dead]
+        if not pool:
+            break
+        victim = int(rng.choice(pool))
+        tick = int(rng.integers(1, max_tick + 1))
+        if kind == "kill":
+            faults.append(Fault(tick, "kill", victim))
+            dead.add(victim)
+        elif kind == "drain":
+            faults.append(Fault(tick, "drain", victim))
+            if rng.random() < 0.5:
+                faults.append(Fault(tick + int(rng.integers(2, 8)),
+                                    "undrain", victim))
+        elif kind == "pool_squeeze":
+            faults.append(Fault(tick, "pool_squeeze", victim,
+                                pages=squeeze_pages))
+            faults.append(Fault(tick + int(rng.integers(2, 8)),
+                                "pool_restore", victim))
+    faults.sort(key=lambda f: f.tick)
+    return FaultPlan(faults=faults, seed=seed)

@@ -284,3 +284,129 @@ def test_fleet_config_validation():
         FleetConfig(spill_queue_depth=-1).validate()
     with pytest.raises(ValueError, match="weights"):
         FleetConfig(load_weight=-0.5).validate()
+    with pytest.raises(ValueError, match="weights"):
+        FleetConfig(slo_weight=-0.1).validate()
+    with pytest.raises(ValueError, match="watchdog_ticks"):
+        FleetConfig(watchdog_ticks=-1).validate()
+
+
+# ===========================================================================
+# replica lifecycle: drain under load, SLO shedding, exhaust reporting
+# ===========================================================================
+
+def test_drain_under_load_empties_and_matches_no_drain_run(model_f32):
+    """The drain contract under real load: a replica holding BOTH
+    prefilling and decoding requests is drained mid-flight; it takes no
+    new work, finishes what it holds in place, every non-cached page
+    returns to its pool, and the fleet's outputs are bit-identical to a
+    run that never drained."""
+    m, params = model_f32
+    from repro.serve import ReplicaState
+    spec = TRACES["mixed"]
+    scfg = make_scfg(spec, False, max_new_tokens=12)
+    items = spec.build(m.cfg.vocab_size)
+
+    base_router = _fleet(m, params, 2, scfg)
+    base_out, _ = replay_fleet(base_router, [TrafficItem(0, it.prompt)
+                                             for it in items], check=True)
+
+    router = _fleet(m, params, 2, scfg)
+    for it in items:
+        router.submit(it.prompt)
+    # a couple of ticks in, replica 0 holds a mix of prefilling (long
+    # prompts chunk across ticks) and decoding (short prompts) requests
+    for _ in range(2):
+        router.tick()
+    from repro.serve.scheduler import RequestState
+    eng0 = router.engines[0]
+    live = [s for s in eng0.slots if s is not None]
+    assert live, "trace never put in-flight work on replica 0"
+    states = {r.state for r in live} | {r.state for r in eng0.queue}
+    assert states & {RequestState.PREFILLING, RequestState.DECODING}, states
+    router.drain(0)
+    assert router.states[0] is ReplicaState.DRAINING
+    pre_dispatch = router.dispatch_counts()
+    # more traffic while draining: ALL of it must land on replica 1
+    extra = [router.submit(list(range(50 + i, 90 + i))) for i in range(3)]
+    assert all(router.placement[f] == 1 for f in extra)
+    assert router.dispatch_counts()[0] == pre_dispatch[0]
+    router.run_until_done()
+    router.check_invariants()
+    # the drained replica emptied in place and its pages came home
+    assert not eng0.queue and all(s is None for s in eng0.slots)
+    cached = eng0.prefix.cached_pages if eng0.prefix is not None else 0
+    assert eng0.allocator.used_pages == cached
+    # and the drain changed no tokens on the original trace
+    got = {f: o for f, o in router.outputs().items() if f in base_out}
+    if got != base_out:
+        reqs = [router.requests[f] for f in base_out]
+        assert_greedy_equivalent(m, params, reqs, base_out)
+
+
+def test_slo_weight_sheds_load_off_a_slow_replica(model_f32):
+    """The SLO dispatch term: a replica whose delivered work-clock p95
+    TTFT is large loses otherwise-tied dispatches once slo_weight > 0 -
+    and keeps winning ties (lowest index) when slo_weight stays 0."""
+    from repro.serve.scheduler import Request
+
+    def seed_slow_history(router, ridx, ttft):
+        # fabricate a finished request whose first token cost `ttft`
+        # work tokens - the shape _observed_ttft() reads
+        r = Request(uid=900, prompt=[1, 2], max_new_tokens=1)
+        r.w_submit = 0
+        r.token_work = [ttft]
+        r.done = True
+        router.engines[ridx].sched.finished.append(r)
+
+    m, params = model_f32
+    scfg = _affinity_scfg(prefix_cache=False)
+    prompt = list(range(1, 40))
+
+    router = _fleet(m, params, 2, scfg)            # slo_weight=0 control
+    seed_slow_history(router, 0, 500)
+    uid = router.submit(prompt)
+    assert router.placement[uid] == 0, "tie must break to lowest index"
+
+    router = _fleet(m, params, 2, scfg, slo_weight=1.0)
+    seed_slow_history(router, 0, 500)
+    uid = router.submit(prompt)
+    assert router.placement[uid] == 1, \
+        "slo_weight must shed load off the slow replica"
+    # symmetric histories tie again: back to the index tie-break
+    router = _fleet(m, params, 2, scfg, slo_weight=1.0)
+    seed_slow_history(router, 0, 500)
+    seed_slow_history(router, 1, 500)
+    uid = router.submit(prompt)
+    assert router.placement[uid] == 0
+
+
+def test_run_until_done_exhaust_reports_statuses(model_f32):
+    """on_exhaust="return" must tell the caller WHAT state every request
+    is in - per-status counts and the still-running fleet uids - not
+    just that ticks ran out."""
+    m, params = model_f32
+    scfg = make_scfg(TRACES["mixed"], False, max_new_tokens=24)
+    router = _fleet(m, params, 2, scfg)
+    uids = [router.submit(list(range(1, 120))) for _ in range(3)]
+    with pytest.warns(UserWarning) as rec:
+        router.run_until_done(max_ticks=1, on_exhaust="return")
+    msg = str(rec[0].message)
+    assert "statuses" in msg and "still running fleet uids" in msg
+    for uid in uids:
+        assert router.statuses()[uid] != "done"
+    with pytest.raises(RuntimeError):
+        router.run_until_done(max_ticks=1)
+
+
+def test_every_router_metric_is_documented(model_f32):
+    """Doc-coverage for the ROUTER registry: docs/routing.md must name
+    every metric the router registers (same contract the engine registry
+    has with docs/observability.md)."""
+    from pathlib import Path
+    m, params = model_f32
+    router = _fleet(m, params, 2, _affinity_scfg())
+    text = (Path(__file__).resolve().parents[1]
+            / "docs" / "routing.md").read_text()
+    missing = [n for n in router.metrics.names() if f"`{n}`" not in text]
+    assert not missing, \
+        f"router metrics missing from docs/routing.md: {missing}"

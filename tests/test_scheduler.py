@@ -628,3 +628,104 @@ def test_property_random_budget_and_chunk(model_f32):
         assert eng.allocator.used_pages == 0
 
     check()
+
+
+# ===========================================================================
+# deadlines: submit-time validation and work-clock expiry
+# ===========================================================================
+
+def test_submit_deadline_and_retry_validation(model_f32):
+    """Every never-servable deadline/retry combination fails AT SUBMIT
+    with a clear error - not deep inside prefill or the allocator."""
+    m, params = model_f32
+    eng = ServeEngine(m, params, _base())
+    with pytest.raises(ValueError, match="deadline"):
+        eng.submit([1, 2, 3], deadline=0)
+    with pytest.raises(ValueError, match="deadline"):
+        eng.submit([1, 2, 3], deadline=-5)
+    with pytest.raises(ValueError, match="minimum prefill work"):
+        # the prompt alone costs 3 work tokens of prefill: a deadline at
+        # or below that is a guaranteed timeout
+        eng.submit([1, 2, 3], deadline=3)
+    with pytest.raises(ValueError, match="max_retries"):
+        eng.submit([1, 2, 3], max_retries=-1)
+    # the boundary case is accepted: one token CAN land in time
+    uid = eng.submit([1, 2, 3], deadline=4, max_retries=0)
+    assert eng.sched.queue[-1].uid == uid
+    assert eng.sched.queue[-1].deadline_tokens == 4
+
+
+def test_default_deadline_tokens_config(model_f32):
+    """ServeConfig.default_deadline_tokens stamps every submit that does
+    not bring its own deadline; 0 means none; negatives are rejected at
+    config validation."""
+    m, params = model_f32
+    with pytest.raises(ValueError, match="default_deadline_tokens"):
+        _base(default_deadline_tokens=-1).validate()
+    eng = ServeEngine(m, params, _base(default_deadline_tokens=64))
+    eng.submit([1, 2, 3])
+    assert eng.sched.queue[-1].deadline_tokens == 64
+    eng.submit([1, 2, 3], deadline=32)
+    assert eng.sched.queue[-1].deadline_tokens == 32
+    eng = ServeEngine(m, params, _base())        # default 0 = no deadline
+    eng.submit([1, 2, 3])
+    assert eng.sched.queue[-1].deadline_tokens is None
+
+
+def test_deadline_expiry_frees_pages_same_tick(model_f32):
+    """A request whose work-clock deadline lands mid-flight goes
+    terminal TIMEOUT the very tick it expires - slot and pages freed
+    immediately (conservation checked per tick), unrelated traffic
+    unharmed, and the engine never hangs."""
+    m, params = model_f32
+    scfg = _base(chunked=True, prefill_chunk=16, tick_token_budget=32,
+                 max_new_tokens=8)
+    eng = ServeEngine(m, params, scfg)
+    # 100-token prompt, deadline 101: barely above the submit-time floor,
+    # but chunked prefill at 32 tokens/tick crosses 101 work tokens long
+    # before the first token - a mid-prefill expiry
+    doomed = eng.submit(list(range(1, 101)), deadline=101)
+    fine = eng.submit(list(range(200, 210)))
+    done = eng.run_until_done(max_ticks=1000)
+    by_uid = {r.uid: r for r in done}
+    assert by_uid[doomed].state is RequestState.TIMEOUT
+    assert by_uid[doomed].finish_reason == "timeout"
+    assert by_uid[doomed].slot is None
+    assert by_uid[fine].state is RequestState.DONE
+    assert len(by_uid[fine].out_tokens) == 8
+    assert eng.stats()["timeouts"] == 1
+    assert eng.allocator.used_pages == 0         # every page came home
+    eng.check_invariants()
+
+
+def test_deadline_expiry_in_queue_never_admits(model_f32):
+    """A request that expires while still QUEUED times out from the
+    queue - it must never be admitted, never touch a slot or a page."""
+    m, params = model_f32
+    scfg = _base(max_batch=1, chunked=True, prefill_chunk=16,
+                 tick_token_budget=32, max_new_tokens=4)
+    eng = ServeEngine(m, params, scfg)
+    hog = eng.submit(list(range(1, 80)))          # owns the only slot
+    starved = eng.submit(list(range(100, 140)), deadline=41)
+    done = eng.run_until_done(max_ticks=1000)
+    by_uid = {r.uid: r for r in done}
+    assert by_uid[hog].state is RequestState.DONE
+    assert by_uid[starved].state is RequestState.TIMEOUT
+    assert by_uid[starved].slot is None
+    assert by_uid[starved].out_tokens == []
+    eng.check_invariants()
+    assert eng.allocator.used_pages == 0
+
+
+def test_deadline_met_is_untouched(model_f32):
+    """A generous deadline changes nothing: same outputs as the
+    deadline-free run (the sweep is pure bookkeeping until an expiry)."""
+    m, params = model_f32
+    prompts = _mixed_prompts(m.cfg.vocab_size)
+    base_out, _ = _serve(m, params, _base(), prompts)
+    eng = ServeEngine(m, params, _base())
+    for p in prompts:
+        eng.submit(p, deadline=100_000)
+    done = eng.run_until_done()
+    assert {r.uid: r.out_tokens for r in done} == base_out
+    assert eng.stats()["timeouts"] == 0

@@ -54,6 +54,8 @@ class TrafficItem:
     max_new: Optional[int] = None
     priority: int = 0
     stop_tokens: Optional[Sequence[int]] = None
+    deadline: Optional[int] = None       # work-clock deadline tokens
+    max_retries: Optional[int] = None    # redispatch budget (fleet only)
     uid: Optional[int] = None      # filled in by replay() at submit time
 
 
@@ -114,7 +116,9 @@ def random_arrivals(vocab: int, n_requests: int, seed: int,
 def submit_item(eng: ServeEngine, item: TrafficItem) -> int:
     item.uid = eng.submit(item.prompt, max_new_tokens=item.max_new,
                           stop_tokens=item.stop_tokens,
-                          priority=item.priority)
+                          priority=item.priority,
+                          deadline=item.deadline,
+                          max_retries=item.max_retries)
     return item.uid
 
 
@@ -170,7 +174,9 @@ def replay_fleet(router, items: Sequence[TrafficItem],
             item.uid = router.submit(item.prompt,
                                      max_new_tokens=item.max_new,
                                      stop_tokens=item.stop_tokens,
-                                     priority=item.priority)
+                                     priority=item.priority,
+                                     deadline=item.deadline,
+                                     max_retries=item.max_retries)
         done.extend(router.tick())
         if check:
             router.check_invariants()
@@ -190,10 +196,15 @@ def replay_fleet(router, items: Sequence[TrafficItem],
 
 def assert_fleet_pages_drained(router):
     """Cross-replica page conservation after a drained trace: every
-    replica's pool holds ONLY its prefix tree's pages (or nothing with
-    caching off) - page pools are strictly per-replica, so a page leaked
-    on one replica cannot be hidden by headroom on another."""
+    SURVIVING replica's pool holds ONLY its prefix tree's pages (or
+    nothing with caching off) - page pools are strictly per-replica, so a
+    page leaked on one replica cannot be hidden by headroom on another.
+    DEAD replicas are skipped: a failed engine's state is abandoned
+    wholesale, so its pool is frozen mid-flight by design."""
+    states = getattr(router, "states", None)
     for i, eng in enumerate(router.engines):
+        if states is not None and states[i].value == "dead":
+            continue
         if not eng.paged:
             continue
         assert all(s is None for s in eng.slots), \
