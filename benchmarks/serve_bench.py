@@ -65,6 +65,16 @@ prefill tokens computed under affinity than round-robin at every n > 1
 (the prefill-tokens-saved curve is the headline artifact,
 BENCH_fleet.json).
 
+--tp serves the mixed trace through the paged chunked batched engine at
+tp_degree=1 and tp_degree=N (--tp-degree, default 2): the KV page pool
+and paged attention kernels shard across devices on the head axis with
+the block table replicated (docs/tensor_parallel.md).  Asserted, never
+eyeballed: bit-identical greedy outputs, equal work clocks and page
+reads, and per-device KV read bytes <= single-device bytes / N + the
+block-table replication overhead (the headline artifact, BENCH_tp.json).
+Needs >= N devices (on CPU,
+XLA_FLAGS=--xla_force_host_platform_device_count=N).
+
 --preempt-trace exercises decode-priority budget shaping and victim
 preemption (docs/scheduling.md): in-flight decodes' p95 work-clock TBT
 under a long-prompt prefill burst must be strictly lower with
@@ -986,6 +996,111 @@ def run_chaos_trace(args, out_json):
     return rows
 
 
+# ===========================================================================
+# tensor-parallel trace (tp=1 vs tp=N: per-device data movement)
+# ===========================================================================
+
+def run_tp_mode(model, params, scfg, prompts, max_new):
+    """Serve the trace and report the TP accounting alongside run_mode's
+    throughput row: per-device KV bytes read, block-table replication
+    bytes, and the movement breakdown's per_device section."""
+    eng = make_engine(model, params, scfg)
+    t0 = time.time()
+    for p in prompts:
+        eng.submit(p, max_new_tokens=max_new)
+    done = eng.run_until_done(max_ticks=100_000)
+    dt = time.time() - t0
+    eng.check_invariants()
+    assert len(done) == len(prompts), (len(done), len(prompts))
+    outs = {r.uid: list(r.out_tokens) for r in done}
+    toks = sum(len(t) for t in outs.values())
+    tp = eng.tp_stats()
+    row = {"tp_degree": tp["tp_degree"], "requests": len(done),
+           "tokens": toks, "seconds": dt,
+           "tok_per_s": toks / max(dt, 1e-9),
+           "work_tokens": eng.stats()["work_tokens"],
+           "kv_pages_read": tp["kv_pages_read"],
+           "page_bytes": tp["page_bytes"],
+           "shard_page_bytes": tp["shard_page_bytes"],
+           "shard_kv_bytes_read": tp["shard_kv_bytes_read"],
+           "table_bytes_replicated": tp["table_bytes_replicated"]}
+    mv = eng.movement_stats()
+    if "per_device" in mv:
+        row["per_device_movement"] = mv["per_device"]
+    return outs, row
+
+
+def run_tp_trace(args, out_json):
+    """The same mixed trace through the paged chunked batched engine at
+    tp_degree=1 and tp_degree=--tp-degree (head-sharded KV pool + kernels,
+    docs/tensor_parallel.md).  Asserted, never eyeballed: bit-identical
+    greedy outputs (the all-gather restores the tp=1 summation order),
+    equal work clocks and page reads, and the headline inequality - each
+    device at tp=N streams at most 1/N of the single-device KV read bytes
+    plus the block-table replication overhead.  Requires >= --tp-degree
+    devices (on CPU: XLA_FLAGS=--xla_force_host_platform_device_count=N)."""
+    cfg = get_smoke_config(args.arch).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            size=args.lens[i % len(args.lens)]).tolist()
+               for i in range(args.requests)]
+
+    def scfg(tp):
+        return ServeConfig(max_batch=args.max_batch, max_seq=args.max_seq,
+                           max_new_tokens=args.max_new, paged=True,
+                           page_size=args.page_size, chunked=True,
+                           batched=True, prefill_chunk=args.prefill_chunk,
+                           tick_token_budget=args.tick_budget
+                           or args.max_batch + 2 * args.prefill_chunk,
+                           tp_degree=tp)
+
+    n = args.tp_degree
+    print(f"# arch={cfg.name} tp_degree=1 vs {n} requests={len(prompts)} "
+          f"lens={args.lens} max_new={args.max_new} "
+          f"devices={jax.device_count()}")
+    print("mode,requests,tokens,tok_per_s,kv_pages_read,"
+          "shard_kv_bytes_read,table_bytes_replicated")
+    rows = {}
+    base_out, rows["tp1"] = run_tp_mode(model, params, scfg(1), prompts,
+                                        args.max_new)
+    tp_out, rows[f"tp{n}"] = run_tp_mode(model, params, scfg(n), prompts,
+                                         args.max_new)
+    for key in ("tp1", f"tp{n}"):
+        r = rows[key]
+        print(f"{key},{r['requests']},{r['tokens']},{r['tok_per_s']:.1f},"
+              f"{r['kv_pages_read']},{r['shard_kv_bytes_read']},"
+              f"{r['table_bytes_replicated']}")
+    assert tp_out == base_out, \
+        f"tp={n} changed greedy outputs vs single-device"
+    assert rows["tp1"]["work_tokens"] == rows[f"tp{n}"]["work_tokens"]
+    assert rows["tp1"]["kv_pages_read"] == rows[f"tp{n}"]["kv_pages_read"], \
+        "sharding must not change which pages decode reads"
+    # the headline: per-device KV reads divide by the degree, and the
+    # price is only the replicated scalar-prefetch state (block table)
+    per_dev = rows[f"tp{n}"]["shard_kv_bytes_read"]
+    single = rows["tp1"]["shard_kv_bytes_read"]
+    overhead = rows[f"tp{n}"]["table_bytes_replicated"]
+    assert per_dev <= single / n + overhead, \
+        (f"per-device KV bytes {per_dev} > single-device/{n} "
+         f"({single / n:.0f}) + table replication ({overhead})")
+    ratio = per_dev / max(single, 1)
+    print(f"# per-device KV read bytes: {single} -> {per_dev} "
+          f"({ratio:.3f}x, ideal {1 / n:.3f}x); table replication "
+          f"overhead {overhead} B; outputs bit-identical")
+    rows["tp_summary"] = {
+        "identical_greedy_outputs": True,
+        "tp_degree": n,
+        "per_device_kv_read_ratio": ratio,
+        "ideal_ratio": 1.0 / n,
+        "table_replication_bytes": overhead}
+    if out_json:
+        Path(out_json).write_text(json.dumps(rows, indent=2))
+        print(f"# wrote {out_json}")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b")
@@ -1043,6 +1158,18 @@ def main(argv=None):
     ap.add_argument("--chaos-ttft-bound", type=float, default=3.0,
                     help="chaos trace: max allowed p95 first-token "
                          "latency inflation (kill-one / fault-free)")
+    ap.add_argument("--tp", action="store_true",
+                    help="tensor-parallel trace: the mixed trace at "
+                         "tp_degree 1 vs --tp-degree (head-sharded KV "
+                         "pool + kernels); asserts bit-identical greedy "
+                         "outputs, equal work clocks, and per-device KV "
+                         "read bytes <= single-device/N + block-table "
+                         "replication overhead (needs >= N devices; on "
+                         "CPU set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N)")
+    ap.add_argument("--tp-degree", type=int, default=2,
+                    help="tp trace: tensor-parallel degree to compare "
+                         "against single-device")
     ap.add_argument("--preempt-trace", action="store_true",
                     help="decode-priority shaping (decode p95 TBT with vs "
                          "without the prefill-share cap under a prefill "
@@ -1097,6 +1224,8 @@ def main(argv=None):
         rows = run_fleet_trace(args, args.json)
     elif args.chaos:
         rows = run_chaos_trace(args, args.json)
+    elif args.tp:
+        rows = run_tp_trace(args, args.json)
     elif args.speculative:
         rows = run_spec_trace(args, args.json)
     elif args.preempt_trace:

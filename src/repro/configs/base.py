@@ -334,6 +334,22 @@ class ServeConfig:
     telemetry: bool = False
     telemetry_spans: int = 65536
 
+    # --- tensor parallelism (launch/mesh.py + kernels/ops.py) ---------------
+    # tp_degree > 1 shards the engine across devices on the HEAD axis: the
+    # KV page pool is head-sharded (one Hkv/tp slice per device), the paged
+    # flash-decode and batched-chunk/verify kernels run under shard_map with
+    # the block table replicated as scalar-prefetch state, and attention
+    # outputs all-gather back to replicated before the output projection -
+    # so every other op (projections, FFN/MoE, sampling) computes on
+    # replicated values with the same float summation order as tp=1, which
+    # is what keeps greedy outputs bit-identical to the single-device
+    # engine.  Requires paged=True, chunked=True, batched=True (the
+    # one-launch tick paths are the sharded paths), n_kv_heads divisible by
+    # tp_degree (checked by ServeEngine against the model config), and at
+    # least tp_degree JAX devices (use
+    # XLA_FLAGS=--xla_force_host_platform_device_count=N on CPU).
+    tp_degree: int = 1
+
     def validate(self) -> "ServeConfig":
         """Scheduler-level config validation (called by ServeEngine).
 
@@ -414,6 +430,15 @@ class ServeConfig:
             raise ValueError(
                 f"priority_age_tokens must be >= 1 when priority_aging is "
                 f"on, got {self.priority_age_tokens}")
+        if self.tp_degree < 1:
+            raise ValueError(f"tp_degree must be >= 1, got {self.tp_degree}")
+        if self.tp_degree > 1 and not (self.paged and self.chunked
+                                       and self.batched):
+            raise ValueError(
+                f"tp_degree={self.tp_degree} requires paged=True, "
+                f"chunked=True and batched=True (tensor parallelism shards "
+                f"the paged one-launch tick paths; got paged={self.paged}, "
+                f"chunked={self.chunked}, batched={self.batched})")
         if self.usable_pages:
             if not self.paged:
                 raise ValueError("usable_pages requires paged=True")

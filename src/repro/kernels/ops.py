@@ -188,18 +188,66 @@ def flash_decode(q, k_cache, v_cache, cache_len, *, window: int = 0,
                             logit_softcap=logit_softcap, scale=scale)
 
 
+def _tp_active(tp_mesh) -> bool:
+    """True when a serve mesh actually shards the head ("model") axis."""
+    return tp_mesh is not None and dict(tp_mesh.shape).get("model", 1) > 1
+
+
+def _tp_head_sharded(fn, tp_mesh, n_pools: int, n_scalars: int):
+    """shard_map a paged attention kernel on the HEAD axis of a serve mesh.
+
+    The wrapped kernel sees q and n_pools page pools with their head axis
+    (axis 2 of (B,S,H,D) / (P,ps,Hkv,D)) split across "model" plus
+    n_scalars replicated block-table/length operands, computes its local
+    head slice — per-head attention math never mixes heads, so the slice
+    is the exact per-head result — and all-gathers outputs back to the
+    full head axis.  With tiled=True the gather re-concatenates head
+    blocks in device order, so the output is bit-identical to the
+    unsharded kernel and everything downstream (output projection, FFN,
+    sampling) runs replicated with the tp=1 float summation order.  The
+    block table rides in replicated, the kernels' scalar-prefetch state.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from .. import compat
+
+    hs = P(None, None, "model", None)
+
+    def local(*args):
+        o = fn(*args)
+        return jax.lax.all_gather(o, "model", axis=2, tiled=True)
+
+    return compat.shard_map(
+        local, tp_mesh,
+        in_specs=(hs,) * (1 + n_pools) + (P(),) * n_scalars,
+        out_specs=P())
+
+
 def paged_flash_decode(q, k_pages, v_pages, block_table, cache_len, *,
                        window: int = 0, logit_softcap: float = 0.0,
                        scale: Optional[float] = None,
-                       impl: Optional[str] = None) -> jax.Array:
+                       impl: Optional[str] = None,
+                       tp_mesh=None) -> jax.Array:
     """Decode against a paged KV cache (vLLM-style block table).
 
     q: (B,1,Hq,D); k_pages/v_pages: (P, page_size, Hkv, D) global page pool;
     block_table: (B, n_max) int32 page ids; cache_len: (B,) valid lengths.
     The Pallas path walks the block table from SMEM inside the BlockSpec
     index maps, keeping the (m, l, acc) merge VMEM-resident; the ref path
-    gathers pages and reuses the chunked dense decode."""
+    gathers pages and reuses the chunked dense decode.
+
+    tp_mesh (a launch/mesh.py serve mesh with a "model" axis > 1) runs the
+    kernel under shard_map with q and the pools head-sharded and the block
+    table replicated; the output comes back replicated (bit-identical to
+    tp=1 — see _tp_head_sharded)."""
     impl = impl or default_impl()
+    if _tp_active(tp_mesh):
+        def run(qc, kp, vp, bt, cl):
+            return paged_flash_decode(qc, kp, vp, bt, cl, window=window,
+                                      logit_softcap=logit_softcap,
+                                      scale=scale, impl=impl)
+        return _tp_head_sharded(run, tp_mesh, 2, 2)(
+            q, k_pages, v_pages, block_table, cache_len)
     if impl == "pallas":
         from . import flash_decode as fd
         return fd.paged_flash_decode(q, k_pages, v_pages, block_table,
@@ -216,7 +264,8 @@ def batched_paged_prefill_attention(q, k_pages, v_pages, page_tables,
                                     window: int = 0,
                                     logit_softcap: float = 0.0,
                                     scale: Optional[float] = None,
-                                    impl: Optional[str] = None) -> jax.Array:
+                                    impl: Optional[str] = None,
+                                    tp_mesh=None) -> jax.Array:
     """Ragged batched mid-prompt chunk-prefill attention over partially
     filled block tables: K chunks of K different sequences in ONE call.
 
@@ -229,8 +278,26 @@ def batched_paged_prefill_attention(q, k_pages, v_pages, page_tables,
     and the chunk itself.  The Pallas path walks every row's table from
     SMEM inside one grid (K, heads, kv-pages) launch with the (m, l,
     acc) merge VMEM-resident (kernels/paged_prefill.py); the ref path
-    gathers pages per row and applies the offset causal mask."""
+    gathers pages per row and applies the offset causal mask.
+
+    tp_mesh shards q and the pools on heads under shard_map with the
+    per-row tables/offsets/cursors replicated (see paged_flash_decode)."""
     impl = impl or default_impl()
+    if _tp_active(tp_mesh):
+        if q_lens is None:
+            def run(qc, kp, vp, pt, qo, tl):
+                return batched_paged_prefill_attention(
+                    qc, kp, vp, pt, qo, tl, None, window=window,
+                    logit_softcap=logit_softcap, scale=scale, impl=impl)
+            return _tp_head_sharded(run, tp_mesh, 2, 3)(
+                q, k_pages, v_pages, page_tables, q_offsets, true_lens)
+
+        def run(qc, kp, vp, pt, qo, tl, ql):
+            return batched_paged_prefill_attention(
+                qc, kp, vp, pt, qo, tl, ql, window=window,
+                logit_softcap=logit_softcap, scale=scale, impl=impl)
+        return _tp_head_sharded(run, tp_mesh, 2, 4)(
+            q, k_pages, v_pages, page_tables, q_offsets, true_lens, q_lens)
     if impl == "pallas":
         from . import paged_prefill as pp
         return pp.batched_paged_prefill_attention(

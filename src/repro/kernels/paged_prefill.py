@@ -34,6 +34,14 @@ Either way the queries must attend causally over EVERYTHING before them -
 earlier pages AND the chunk's own K/V, both reached through the row's
 block-table row.
 
+Under tensor parallelism (kernels/ops.py _tp_head_sharded,
+docs/tensor_parallel.md) this kernel runs unmodified inside shard_map on
+each device's contiguous head slice: per-head attention never mixes
+heads, the scalar-prefetched tables/offsets/cursors ride in replicated,
+and the caller requires n_kv_heads % tp_degree == 0 so every shard holds
+whole GQA groups.  Nothing in here is sharding-aware - the kernel sees a
+smaller head count and is otherwise bit-identical.
+
 Same construction as paged_flash_decode (kernels/flash_decode.py): the
 block tables are scalar-prefetched into SMEM, the BlockSpec index map IS
 the page-table walk, and the running (m, l, acc) online-softmax state

@@ -187,9 +187,14 @@ def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         o_new = o * alpha[..., None] + pv
         return (m_new, l_new, o_new), None
 
-    m0 = jnp.full((B, Hkv, G), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((B, Hkv, G), jnp.float32)
-    o0 = jnp.zeros((B, Hkv, G, D), jnp.float32)
+    # varying-zero seed: under shard_map (the tensor-parallel serve path
+    # wraps this kernel with the head axis sharded) the scan carry must
+    # carry the same "varying manual axes" type as the body outputs, which
+    # depend on the sharded cache; outside shard_map this is exactly +0.0
+    vzero = jnp.sum(k_cache[:, :0].astype(jnp.float32))
+    m0 = jnp.full((B, Hkv, G), NEG_INF, jnp.float32) + vzero
+    l0 = jnp.zeros((B, Hkv, G), jnp.float32) + vzero
+    o0 = jnp.zeros((B, Hkv, G, D), jnp.float32) + vzero
     (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0),
                                 (kb, vb, jnp.arange(nblk)))
     o = o / jnp.maximum(l, 1e-20)[..., None]

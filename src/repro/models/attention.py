@@ -116,9 +116,26 @@ def attn_prefill_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
     return y, k_pages, v_pages
 
 
+def _tp_pool_constrain(pages, tp_mesh):
+    """Pin a KV page pool to its head-sharded layout on the serve mesh.
+
+    The engine commits the pools head-sharded at init; this re-asserts the
+    layout on the scatter output inside jit (per-layer pool slices inside
+    the layer scan carry no committed sharding of their own), so the
+    scatter stays a local per-shard write instead of a resharding round
+    trip.  The scattered K/V values are computed from replicated
+    activations, so the write is pure data movement - sharding it cannot
+    change any attention result."""
+    if tp_mesh is None:
+        return pages
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        pages, NamedSharding(tp_mesh, P(None, None, "model", None)))
+
+
 def attn_decode_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
                       block_table, lens, *, window: int = 0,
-                      impl: Optional[str] = None):
+                      impl: Optional[str] = None, tp_mesh=None):
     """Single-token decode through the block table.
 
     x: (B, 1, D); k/v_pages: (P, page_size, Hkv, D) global pool;
@@ -126,7 +143,10 @@ def attn_decode_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
     token's K/V is scattered into page lens // page_size at offset
     lens % page_size).  Idle slots (lens == 0, block-table row zeroed) write
     into the reserved null page 0, never into live pages.
-    Returns (y, k_pages, v_pages)."""
+    tp_mesh: head-shard the pools and the decode kernel across the serve
+    mesh's "model" axis (kernels/ops.py paged_flash_decode); the attention
+    output gathers back to replicated so wo and everything after run with
+    tp=1 numerics.  Returns (y, k_pages, v_pages)."""
     B = x.shape[0]
     q, k, v = _qkv(params, x, cfg)
     if cfg.use_rope:
@@ -138,10 +158,12 @@ def attn_decode_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
     off = lens % page_size
     k_pages = k_pages.at[page, off].set(k[:, 0].astype(k_pages.dtype))
     v_pages = v_pages.at[page, off].set(v[:, 0].astype(v_pages.dtype))
+    k_pages = _tp_pool_constrain(k_pages, tp_mesh)
+    v_pages = _tp_pool_constrain(v_pages, tp_mesh)
     o = ops.paged_flash_decode(q, k_pages, v_pages, block_table, lens + 1,
                                window=window,
                                logit_softcap=cfg.attn_logit_softcap,
-                               impl=impl)
+                               impl=impl, tp_mesh=tp_mesh)
     y = dense(params["wo"], o.reshape(B, 1, cfg.n_heads * cfg.head_dim))
     return y, k_pages, v_pages
 
@@ -149,7 +171,7 @@ def attn_decode_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
 def attn_prefill_chunks_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
                               page_tables, offsets, true_lens, *,
                               q_lens=None, window: int = 0,
-                              impl: Optional[str] = None):
+                              impl: Optional[str] = None, tp_mesh=None):
     """Prefill a RAGGED BATCH of mid-prompt chunks - K chunks of K
     different sequences, each at its own prompt position - into their
     pages, in one pass.
@@ -185,9 +207,12 @@ def attn_prefill_chunks_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
     offs = jnp.where(valid, pos % page_size, 0)
     k_pages = k_pages.at[pages, offs].set(k.astype(k_pages.dtype))
     v_pages = v_pages.at[pages, offs].set(v.astype(v_pages.dtype))
+    k_pages = _tp_pool_constrain(k_pages, tp_mesh)
+    v_pages = _tp_pool_constrain(v_pages, tp_mesh)
     o = ops.batched_paged_prefill_attention(
         q, k_pages, v_pages, page_tables, offsets, true_lens, q_lens,
-        window=window, logit_softcap=cfg.attn_logit_softcap, impl=impl)
+        window=window, logit_softcap=cfg.attn_logit_softcap, impl=impl,
+        tp_mesh=tp_mesh)
     y = dense(params["wo"], o.reshape(K, S, cfg.n_heads * cfg.head_dim))
     return y, k_pages, v_pages
 

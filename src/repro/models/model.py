@@ -244,7 +244,8 @@ def build_model(cfg: ModelConfig) -> Model:
         logits = unembed(params["tok"], x_last, cfg)
         return logits.astype(jnp.float32), cache, lens
 
-    def prefill_chunks(params, batch, cache, page_tables, *, impl=None):
+    def prefill_chunks(params, batch, cache, page_tables, *, impl=None,
+                       tp_mesh=None):
         """Prefill a RAGGED BATCH of mid-prompt chunks: K chunks of K
         different sequences, each at its own prompt position, in ONE pass
         (the serve engine's one-launch tick packs every chunk the
@@ -283,7 +284,8 @@ def build_model(cfg: ModelConfig) -> Model:
         x = constrain(x, "btd")
         x, cache = T.stack_prefill_chunks_paged(params["blocks"], x, cfg,
                                                 cache, page_tables, offs,
-                                                lens, impl=impl)
+                                                lens, impl=impl,
+                                                tp_mesh=tp_mesh)
         x = apply_norm(params["final_norm"], x, cfg)
         # each row's last REAL token sits at chunk index lens - offset - 1
         # (clamped to 0 for dead padding rows, whose logits are dropped)
@@ -292,7 +294,8 @@ def build_model(cfg: ModelConfig) -> Model:
         logits = unembed(params["tok"], x_last, cfg)
         return logits.astype(jnp.float32), cache, lens
 
-    def verify_chunks(params, batch, cache, page_tables, *, impl=None):
+    def verify_chunks(params, batch, cache, page_tables, *, impl=None,
+                      tp_mesh=None):
         """Score a ragged batch of SPECULATIVE DRAFT CHAINS: row k holds
         [pending token, draft_1 .. draft_m] at absolute positions
         batch["offset"][k] + arange(S) - exactly the prefill_chunks
@@ -326,7 +329,8 @@ def build_model(cfg: ModelConfig) -> Model:
         x = constrain(x, "btd")
         x, cache = T.stack_prefill_chunks_paged(params["blocks"], x, cfg,
                                                 cache, page_tables, offs,
-                                                lens, q_lens=qls, impl=impl)
+                                                lens, q_lens=qls, impl=impl,
+                                                tp_mesh=tp_mesh)
         x = apply_norm(params["final_norm"], x, cfg)
         logits = unembed(params["tok"], x, cfg)
         return logits.astype(jnp.float32), cache
@@ -390,9 +394,11 @@ def build_model(cfg: ModelConfig) -> Model:
 
     # ---------------- decode -------------------------------------------------
     def decode_step(params, tokens, lens, cache, *, impl=None,
-                    seq_parallel=False, enc_lens=None):
+                    seq_parallel=False, enc_lens=None, tp_mesh=None):
         """tokens: (B,1); lens: (B,) positions to write.  Returns
-        (logits (B,1,V), new_cache)."""
+        (logits (B,1,V), new_cache).  tp_mesh head-shards the paged decode
+        across the serve mesh (attention families with a paged cache
+        only)."""
         if fam == "audio":
             x = embed(params["tok"], tokens, cfg)
             pos = jax.vmap(lambda l: sinusoidal_positions(1, cfg.d_model, 0)
@@ -419,7 +425,8 @@ def build_model(cfg: ModelConfig) -> Model:
                             "paged decode does not compose with the "
                             "sequence-parallel cache layout")
                     x, cache = T.stack_decode_paged(params["blocks"], x, cfg,
-                                                    cache, lens, impl=impl)
+                                                    cache, lens, impl=impl,
+                                                    tp_mesh=tp_mesh)
                 else:
                     x, cache = T.stack_decode(params["blocks"], x, cfg, cache,
                                               lens, impl=impl,

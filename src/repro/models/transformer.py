@@ -216,7 +216,7 @@ def stack_prefill_paged(params, x, cfg: ModelConfig, cache, page_ids, *,
 
 def stack_prefill_chunks_paged(params, x, cfg: ModelConfig, cache,
                                page_tables, offsets, true_lens, *,
-                               q_lens=None, impl=None):
+                               q_lens=None, impl=None, tp_mesh=None):
     """Paged prefill of a RAGGED BATCH of mid-prompt chunks - K chunks of
     K different sequences at K different prompt positions, ONE pass
     through the stack: x: (K, S, D), row k at absolute positions
@@ -240,7 +240,8 @@ def stack_prefill_chunks_paged(params, x, cfg: ModelConfig, cache,
             lambda w: attn_prefill_chunks_paged(p["attn"], h_in, cfg, kp,
                                                 vp, page_tables, offsets,
                                                 true_lens, q_lens=q_lens,
-                                                window=w, impl=impl))
+                                                window=w, impl=impl,
+                                                tp_mesh=tp_mesh))
         return _ffn_tail(p, x + h, cfg), (kp, vp)
 
     x, (kp, vp) = jax.lax.scan(
@@ -266,7 +267,7 @@ stack_prefill_suffix_paged = stack_prefill_chunk_paged
 
 
 def stack_decode_paged(params, x, cfg: ModelConfig, cache, lens, *,
-                       impl=None):
+                       impl=None, tp_mesh=None):
     """Batched single-token decode through the block table (all layers share
     one table; each layer owns its own page pool slab)."""
     flags = _layer_windows(cfg)
@@ -278,7 +279,8 @@ def stack_decode_paged(params, x, cfg: ModelConfig, cache, lens, *,
         h, kp, vp = _windowed(
             cfg, flag,
             lambda w: attn_decode_paged(p["attn"], h_in, cfg, kp, vp, bt,
-                                        lens, window=w, impl=impl))
+                                        lens, window=w, impl=impl,
+                                        tp_mesh=tp_mesh))
         return _ffn_tail(p, x + h, cfg), (kp, vp)
 
     x, (kp, vp) = jax.lax.scan(

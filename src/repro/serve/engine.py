@@ -108,7 +108,8 @@ import numpy as np
 
 from ..configs.base import ModelConfig, ServeConfig
 from ..models import Model, build_model
-from .paged_cache import PageAllocator, pages_needed
+from .paged_cache import (PageAllocator, pages_needed, page_kv_bytes,
+                          shard_page_kv_bytes)
 from .prefix_cache import RadixPrefixCache
 from .scheduler import (ChunkTask, DraftTask, Request, RequestState,
                         SpecBatch, TokenBudgetScheduler)
@@ -145,7 +146,7 @@ _STEP_CACHE: Dict[int, Any] = {}
 
 
 def _shared_steps(model: Model, temperature: float, top_k: int = 0,
-                  top_p: float = 1.0) -> Dict[str, Any]:
+                  top_p: float = 1.0, tp_mesh=None) -> Dict[str, Any]:
     # keyed by object identity WITH the model pinned in the entry, so an
     # id can never be recycled for a different model
     entry = _STEP_CACHE.get(id(model))
@@ -153,7 +154,11 @@ def _shared_steps(model: Model, temperature: float, top_k: int = 0,
         entry = (model, {})
         _STEP_CACHE[id(model)] = entry
     per_model = entry[1]
-    knobs = (float(temperature), int(top_k), float(top_p))
+    # the tp mesh keys structurally (jax.sharding.Mesh equality is devices
+    # + axis names), so two TP replicas at the same degree share the SAME
+    # jitted steps - the cross-replica bit-identity the fleet differential
+    # tests rely on extends to TP fleets unchanged
+    knobs = (float(temperature), int(top_k), float(top_p), tp_mesh)
     steps = per_model.get(knobs)
     if steps is None:
         # donate the cache through the jit boundary so a tick updates the
@@ -171,7 +176,8 @@ def _shared_steps(model: Model, temperature: float, top_k: int = 0,
             # and the sampled tokens come back in ONE device_get at tick end
             "decode_fused": _jit_donating_cache(
                 make_fused_decode_step(model, temperature=temperature,
-                                       top_k=top_k, top_p=top_p), 1),
+                                       top_k=top_k, top_p=top_p,
+                                       tp_mesh=tp_mesh), 1),
             "prefill": _jit_donating_cache(make_prefill_step(model), 2),
         }
         if model.prefill_paged is not None:
@@ -185,13 +191,15 @@ def _shared_steps(model: Model, temperature: float, top_k: int = 0,
             # one ragged batch, final-chunk tokens sampled device-side
             steps["prefill_chunks"] = _jit_donating_cache(
                 make_chunk_batch_step(model, temperature=temperature,
-                                      top_k=top_k, top_p=top_p), 2)
+                                      top_k=top_k, top_p=top_p,
+                                      tp_mesh=tp_mesh), 2)
         if model.verify_chunks is not None:
             # the speculative verify launch: one ragged batch scores every
             # draft chain and folds acceptance into tokens/lens device-side
             steps["spec_verify"] = _jit_donating_cache(
                 make_spec_verify_step(model, temperature=temperature,
-                                      top_k=top_k, top_p=top_p), 2)
+                                      top_k=top_k, top_p=top_p,
+                                      tp_mesh=tp_mesh), 2)
         per_model[knobs] = steps
     return steps
 
@@ -272,7 +280,30 @@ class ServeEngine:
                 "Queued + in-flight work tokens (prompt remaining plus "
                 "unspent generation budget) - the load signal load_stats() "
                 "publishes for the fleet router")
+        m.gauge("serve_tp_degree",
+                "Tensor-parallel degree of this engine (devices the "
+                "head-sharded KV page pool spans; 1 = single-device)")
+        m.counter("serve_tp_shard_kv_bytes_read_total",
+                  "KV bytes read PER DEVICE by token-emitting launches "
+                  "(kv_pages_read converted through the head-sharded "
+                  "per-shard page bytes; equals the full page bytes at "
+                  "tp_degree 1)")
+        m.counter("serve_tp_table_bytes_replicated_total",
+                  "Block-table bytes uploaded times tp_degree - the "
+                  "replication overhead of keeping the table as scalar-"
+                  "prefetch state on every shard")
         self.prefix: Optional[RadixPrefixCache] = None
+        # tensor parallelism: the mesh is built (and the pools committed
+        # head-sharded) inside the paged branch below; tp_degree > 1
+        # without paged mode is rejected by ServeConfig.validate()
+        self.tp_mesh = None
+        m.get("serve_tp_degree").set(scfg.tp_degree)
+        # per-device bytes of one page (full page bytes at tp_degree 1);
+        # indivisible head/tp combos fail with the clear error below, so
+        # fall back to tp=1 math here rather than raising twice
+        self._shard_page_bytes = shard_page_kv_bytes(
+            cfg, scfg.page_size,
+            scfg.tp_degree if cfg.n_kv_heads % scfg.tp_degree == 0 else 1)
         if scfg.prefix_cache and not scfg.paged:
             raise ValueError("prefix_cache requires paged=True")
         if self.paged:
@@ -293,6 +324,33 @@ class ServeEngine:
             self.cache = model.init_cache(B, scfg.max_seq,
                                           page_size=scfg.page_size,
                                           num_pages=num_pages)
+            if scfg.tp_degree > 1:
+                if cfg.n_kv_heads % scfg.tp_degree:
+                    raise ValueError(
+                        f"ServeConfig.tp_degree ({scfg.tp_degree}) must "
+                        f"divide n_kv_heads ({cfg.n_kv_heads}): the KV "
+                        f"page pool shards on the head axis, so every "
+                        f"device needs a whole number of KV heads (GQA "
+                        f"query heads follow their KV head's shard)")
+                from jax.sharding import NamedSharding, PartitionSpec
+                from ..launch.mesh import make_serve_mesh
+                self.tp_mesh = make_serve_mesh(scfg.tp_degree)
+                # commit placement ONCE at construction: the (L, P, ps,
+                # Hkv, D) pools head-sharded, params fully replicated, so
+                # every jitted step compiles against stable shardings and
+                # per-tick uploads (block table, chunk packs, tokens) stay
+                # small uncommitted host arrays jit re-shards for free
+                hs = NamedSharding(self.tp_mesh,
+                                   PartitionSpec(None, None, None, "model",
+                                                 None))
+                rep = NamedSharding(self.tp_mesh, PartitionSpec())
+                self.cache = {
+                    "k_pages": jax.device_put(self.cache["k_pages"], hs),
+                    "v_pages": jax.device_put(self.cache["v_pages"], hs),
+                    "block_table": jax.device_put(
+                        self.cache["block_table"], rep),
+                }
+                self.params = jax.device_put(self.params, rep)
             if scfg.prefix_cache:
                 self.prefix = RadixPrefixCache(self.allocator,
                                                scfg.page_size, metrics=m)
@@ -332,7 +390,7 @@ class ServeEngine:
         # - no per-engine recompiles, and bit-identical numerics across
         # engine instances (see _shared_steps)
         steps = _shared_steps(model, scfg.temperature, scfg.top_k,
-                              scfg.top_p)
+                              scfg.top_p, tp_mesh=self.tp_mesh)
         self._decode = steps["decode"]
         self._decode_fused = steps["decode_fused"]
         self._prefill = steps["prefill"]
@@ -396,7 +454,26 @@ class ServeEngine:
         estimated HBM / SRAM bytes and energy folded from the per-launch
         records through core/energy.py (see telemetry.movement_breakdown)."""
         return movement_breakdown(self.tm.launches, self.model.cfg,
-                                  self.scfg)
+                                  self.scfg, tp_degree=self.scfg.tp_degree)
+
+    def tp_stats(self) -> Dict[str, int]:
+        """Tensor-parallel accounting snapshot: the per-device KV bytes
+        the token-emitting launches read, the block-table bytes paid to
+        replication, and the per-shard page-byte unit - everything the
+        conformance cross-check (shard_bytes * tp == pages_read *
+        page_bytes) and the serve_bench --tp inequality consume."""
+        g = self.tm.registry.get
+        return {
+            "tp_degree": int(self.scfg.tp_degree),
+            "shard_kv_bytes_read":
+                int(g("serve_tp_shard_kv_bytes_read_total").value),
+            "table_bytes_replicated":
+                int(g("serve_tp_table_bytes_replicated_total").value),
+            "shard_page_bytes": int(self._shard_page_bytes),
+            "page_bytes": int(page_kv_bytes(self.model.cfg,
+                                            self.scfg.page_size)),
+            "kv_pages_read": int(self.kv_pages_read),
+        }
 
     def _prefix_event(self, name: str, **args):
         """Prefix-cache hit/publish/evict instants onto the engine track
@@ -420,6 +497,24 @@ class ServeEngine:
             kv_pages_written=kv_pages_written,
             new_kv_tokens=new_kv_tokens,
             work_clock=self.sched.work_clock), wall0, wall1)
+
+    def _note_kv_pages_read(self, n_pages: int):
+        """Count pages a token-emitting launch read, in BOTH units: pool
+        pages (the historical serve_kv_pages_read_total) and per-device
+        bytes (pages x the head-sharded per-shard page bytes) - every
+        shard walks the same replicated block table over the same page
+        ids, so per-shard reads are exactly total reads / tp_degree."""
+        n = int(n_pages)
+        self.kv_pages_read += n
+        self.tm.registry.get("serve_tp_shard_kv_bytes_read_total").inc(
+            n * self._shard_page_bytes)
+
+    def _note_table_upload(self, nbytes: int):
+        """Count one block-table upload's replication cost: the table is
+        scalar-prefetch state on every shard, so the bytes multiply by
+        tp_degree instead of dividing."""
+        self.tm.registry.get("serve_tp_table_bytes_replicated_total").inc(
+            int(nbytes) * int(self.scfg.tp_degree))
 
     def _row_pages(self, slot: int, true_len: int) -> int:
         """KV pages slot's attention READS at KV length `true_len`:
@@ -598,6 +693,7 @@ class ServeEngine:
         out["gen_tokens"] = self.gen_tokens
         out["decode_launches"] = self.decode_launches
         out["kv_pages_read"] = self.kv_pages_read
+        out["tp_degree"] = self.scfg.tp_degree
         out["tokens_per_launch"] = (self.gen_tokens / self.decode_launches
                                     if self.decode_launches else 0.0)
         out["tokens_per_kv_page"] = (self.gen_tokens / self.kv_pages_read
@@ -630,6 +726,16 @@ class ServeEngine:
                 self.prefix.check_invariants()
             else:
                 self.allocator.check_invariants()
+            # per-shard byte accounting tracks the page counter exactly
+            # (every read is noted through _note_kv_pages_read, in pages
+            # AND per-device bytes, off one shard_page_kv_bytes unit)
+            shard_bytes = int(self.tm.registry.get(
+                "serve_tp_shard_kv_bytes_read_total").value)
+            assert shard_bytes == self.kv_pages_read \
+                * self._shard_page_bytes, \
+                (f"per-shard KV byte accounting drifted: {shard_bytes} != "
+                 f"{self.kv_pages_read} pages x {self._shard_page_bytes} "
+                 f"bytes/shard-page")
         for i, r in enumerate(self.slots):
             if r is None:
                 if self.paged:
@@ -829,6 +935,7 @@ class ServeEngine:
         if masked:
             tbl[masked] = 0
         self.cache["block_table"] = jnp.asarray(tbl)
+        self._note_table_upload(tbl.nbytes)
         self._table_dirty = False
 
     # ------------------------------------------------------------------
@@ -947,6 +1054,7 @@ class ServeEngine:
         page_ids = jnp.asarray(pages[:toks.shape[1] // scfg.page_size],
                                jnp.int32)
         self.cache["block_table"] = self.allocator.table_device()
+        self._note_table_upload(self.allocator.table.nbytes)
         batch = {"tokens": toks, "true_lens": jnp.asarray([s_real])}
         self.jit_calls += 1
         w0 = self._wall()
@@ -1024,6 +1132,7 @@ class ServeEngine:
         self._phase(req, "PREFILLING", slot, cached_tokens=start)
         # the decode step later this tick walks the slot's row on device
         self.cache["block_table"] = self.allocator.table_device()
+        self._note_table_upload(self.allocator.table.nbytes)
         self._run_chunk(ChunkTask(req, slot, start,
                                   len(req.prompt) - start))
         return True
@@ -1225,8 +1334,8 @@ class ServeEngine:
         self.jit_calls += 1
         self.decode_launches += 1
         ps = self.scfg.page_size
-        self.kv_pages_read += int(sum(-(-int(t) // ps)
-                                      for t in pack.true_lens[live]))
+        self._note_kv_pages_read(sum(-(-int(t) // ps)
+                                     for t in pack.true_lens[live]))
         w0 = self._wall()
         self.cache, self.tokens, self.lens, self._spec_nacc = \
             self._spec_verify(self.params, batch, self.cache,
@@ -1448,9 +1557,9 @@ class ServeEngine:
             live[plain_slots] = True
             self.jit_calls += 1
             self.decode_launches += 1
-            self.kv_pages_read += sum(
+            self._note_kv_pages_read(sum(
                 -(-(int(self._lens_np[i]) + 1) // self.scfg.page_size)
-                for i in plain_slots)
+                for i in plain_slots))
             pages_read = sum(self._row_pages(i, int(self._lens_np[i]) + 1)
                              for i in plain_slots)
             lw0 = self._wall()
@@ -1612,9 +1721,9 @@ class ServeEngine:
         self.decode_launches += 1
         pages_read = 0
         if self.paged:
-            self.kv_pages_read += sum(
+            self._note_kv_pages_read(sum(
                 -(-(int(self._lens_np[i]) + 1) // self.scfg.page_size)
-                for i in active)
+                for i in active))
             pages_read = sum(self._row_pages(i, int(self._lens_np[i]) + 1)
                              for i in active)
         lw0 = self._wall()

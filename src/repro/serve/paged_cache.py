@@ -56,6 +56,32 @@ def paged_kv_bytes(cfg: ModelConfig, scfg: ServeConfig,
             * cfg.n_kv_heads * cfg.head_dim * dt)
 
 
+def page_kv_bytes(cfg: ModelConfig, page_size: int) -> int:
+    """Bytes of K+V ONE page holds across every layer - the unit the
+    engine's analytic kv_pages_read accounting converts to bytes."""
+    dt = jnp.dtype(cfg.dtype).itemsize
+    return 2 * cfg.n_layers * page_size * cfg.n_kv_heads * cfg.head_dim * dt
+
+
+def shard_page_kv_bytes(cfg: ModelConfig, page_size: int,
+                        tp_degree: int) -> int:
+    """Bytes of K+V one page holds ON ONE DEVICE of a head-sharded
+    tensor-parallel pool: each of the tp_degree shards owns an
+    Hkv/tp_degree head slice of every page, so per-device page bytes are
+    exactly page_kv_bytes / tp_degree.  The allocator's page ids and block
+    table are replicated (every shard walks the same table), which is why
+    the engine's per-shard byte accounting can reuse the single allocator
+    unchanged - the cross-check in tests/conformance.py asserts
+    shard_bytes * tp_degree == kv_pages_read * page_kv_bytes."""
+    if tp_degree < 1:
+        raise ValueError(f"tp_degree must be >= 1, got {tp_degree}")
+    if cfg.n_kv_heads % tp_degree:
+        raise ValueError(
+            f"n_kv_heads ({cfg.n_kv_heads}) must divide by tp_degree "
+            f"({tp_degree}) for a head-sharded page pool")
+    return page_kv_bytes(cfg, page_size) // tp_degree
+
+
 class OutOfPages(RuntimeError):
     """Raised by alloc() when the free list cannot cover a reservation."""
 

@@ -616,6 +616,10 @@ class FleetRouter:
             k: sum(s[k] for s in per) for k in self._SUM_KEYS}
         out["n_replicas"] = len(self.engines)
         out["policy"] = self.fcfg.policy
+        # every replica shares one ServeConfig, so one degree describes
+        # the fleet (docs/tensor_parallel.md); stats() sums would be
+        # meaningless for a degree
+        out["tp_degree"] = self.scfg.tp_degree
         out["ticks"] = int(self.metrics.get("fleet_ticks_total").value)
         out["dispatch"] = self.dispatch_counts()
         out["spills"] = int(self.metrics.get("fleet_spills_total").value)

@@ -31,6 +31,13 @@ Request lifecycle (Request.state):
                cursor at cached     sampled from        published to the
                prefix end)          prompt logits)      prefix cache)
 
+The scheduler is TENSOR-PARALLEL INVARIANT by construction: it plans in
+tokens, slots, and pages - never devices - so ServeConfig.tp_degree does
+not appear anywhere in admission, chunk packing, preemption, or the work
+clock.  A tp=N engine therefore runs the identical tick plan as tp=1 on
+the same trace, which is why the TP conformance suite can assert EQUAL
+work-clock totals, not merely comparable ones (docs/tensor_parallel.md).
+
 Admission policy is pluggable: "fifo" (arrival order) or "sjf" (shortest
 prompt first - minimizes mean TTFT at the cost of long-prompt fairness).
 Backpressure is per-policy head-of-line: when the chosen candidate cannot

@@ -86,7 +86,8 @@ def make_chunk_prefill_step(model: Model):
 
 
 def make_chunk_batch_step(model: Model, *, temperature: float,
-                          top_k: int = 0, top_p: float = 1.0):
+                          top_k: int = 0, top_p: float = 1.0,
+                          tp_mesh=None):
     """chunk_batch_step(params, batch, cache, page_tables, tokens, lens,
     key) -> (cache, tokens, lens).  ONE jitted launch for a whole tick's
     prefill plan: executes every packed chunk row (Model.prefill_chunks),
@@ -99,12 +100,14 @@ def make_chunk_batch_step(model: Model, *, temperature: float,
     "tokens" (K, S), "offset" (K,), "true_lens" (K,), and "final_slot"
     (K,) - the slot of each final row, `max_batch` (out of range, dropped
     by mode="drop") for non-final and dead padding rows.  `key` feeds
-    temperature > 0 sampling and is ignored at 0."""
+    temperature > 0 sampling and is ignored at 0.  tp_mesh head-shards
+    the chunk kernel across the serve mesh (kernels/ops.py)."""
 
     def chunk_batch_step(params, batch, cache, page_tables, tokens, lens,
                          key):
         logits, cache, cursors = model.prefill_chunks(params, batch, cache,
-                                                      page_tables)
+                                                      page_tables,
+                                                      tp_mesh=tp_mesh)
         toks = sample_token(logits, temperature=temperature, top_k=top_k,
                             top_p=top_p, key=key)
         slots = batch["final_slot"]
@@ -116,7 +119,8 @@ def make_chunk_batch_step(model: Model, *, temperature: float,
 
 
 def make_fused_decode_step(model: Model, *, temperature: float,
-                           top_k: int = 0, top_p: float = 1.0):
+                           top_k: int = 0, top_p: float = 1.0,
+                           tp_mesh=None):
     """fused_decode_step(params, cache, tokens, lens, live, key) ->
     (cache, tokens, lens).  One batched decode step with sampling fused
     in: lanes where `live` (B,) is True get their sampled token written
@@ -126,7 +130,8 @@ def make_fused_decode_step(model: Model, *, temperature: float,
     is ignored at 0."""
 
     def fused_decode_step(params, cache, tokens, lens, live, key):
-        logits, cache = model.decode_step(params, tokens, lens, cache)
+        logits, cache = model.decode_step(params, tokens, lens, cache,
+                                          tp_mesh=tp_mesh)
         toks = sample_token(logits, temperature=temperature, top_k=top_k,
                             top_p=top_p, key=key)
         tokens = jnp.where(live[:, None], toks, tokens)
@@ -137,7 +142,8 @@ def make_fused_decode_step(model: Model, *, temperature: float,
 
 
 def make_spec_verify_step(model: Model, *, temperature: float,
-                          top_k: int = 0, top_p: float = 1.0):
+                          top_k: int = 0, top_p: float = 1.0,
+                          tp_mesh=None):
     """spec_verify_step(params, batch, cache, page_tables, tokens, lens,
     key) -> (cache, tokens, lens, n_acc).  ONE jitted launch verifies
     every draft chain the scheduler planned this tick (SpecBatch,
@@ -166,7 +172,7 @@ def make_spec_verify_step(model: Model, *, temperature: float,
     def spec_verify_step(params, batch, cache, page_tables, tokens, lens,
                          key):
         logits, cache = model.verify_chunks(params, batch, cache,
-                                            page_tables)
+                                            page_tables, tp_mesh=tp_mesh)
         tgt = sampling.sample_chain(logits, key, temperature=temperature,
                                     top_k=top_k, top_p=top_p)
         n_acc, bonus = sampling.speculative_accept(

@@ -509,10 +509,18 @@ def _kv_token_bytes(cfg) -> int:
 
 
 def movement_breakdown(launches: Iterable[LaunchRecord], cfg, scfg,
-                       energy_table=None) -> Dict[str, Dict[str, float]]:
+                       energy_table=None,
+                       tp_degree: int = 1) -> Dict[str, Dict[str, float]]:
     """Fold per-launch movement records into a paper-style (Fig. 6)
     data-movement breakdown per launch kind, in estimated HBM and SRAM
     bytes and energy.
+
+    tp_degree > 1 adds a "per_device" section attributing the totals to
+    ONE device of a head-sharded tensor-parallel engine: KV bytes divide
+    by tp_degree (each shard streams only its Hkv/tp head slice of every
+    page), while weights, activations, and the block table are replicated
+    - every device streams them in full, which is exactly the replication
+    overhead the serve_bench --tp inequality charges against the split.
 
     The byte model is a first-order serving roofline, not a device
     counter (benchmarks/roofline.py makes the same tradeoff):
@@ -589,6 +597,22 @@ def movement_breakdown(launches: Iterable[LaunchRecord], cfg, scfg,
         for row in kinds.values():
             row["hbm_share"] = row["hbm_bytes"] / total["hbm_bytes"]
     kinds["total"] = total
+    if tp_degree > 1:
+        per_dev_hbm = ((total["kv_read_bytes"] + total["kv_write_bytes"])
+                       / tp_degree
+                       + total["weight_bytes"] + total["act_bytes"])
+        kinds["per_device"] = {
+            "tp_degree": float(tp_degree),
+            "kv_read_bytes": total["kv_read_bytes"] / tp_degree,
+            "kv_write_bytes": total["kv_write_bytes"] / tp_degree,
+            "weight_bytes": total["weight_bytes"],     # replicated
+            "act_bytes": total["act_bytes"],           # replicated
+            "hbm_bytes": per_dev_hbm,
+            "sram_bytes": 2.0 * per_dev_hbm,
+            "energy_j": energy_of(
+                Activity(dram_bytes=per_dev_hbm,
+                         sram_bytes=2.0 * per_dev_hbm), tbl).total,
+        }
     return kinds
 
 

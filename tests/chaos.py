@@ -30,6 +30,12 @@ terminal - done, timeout, or failed; nothing lost) and page conservation
 on survivors.  Conformance on top of that is the caller's one-liner:
 assert_chaos_conformance() checks every request that finished DONE
 produced output identical to a fault-free run of the same trace.
+
+The harness is tp-degree agnostic: a fleet of head-sharded replicas
+(ServeConfig.tp_degree > 1, docs/tensor_parallel.md) runs the same fault
+vocabulary unchanged, and the per-tick engine invariant sweep then also
+cross-checks every survivor's per-shard KV byte accounting against its
+allocator's page counter (ServeEngine.check_invariants).
 """
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple

@@ -149,6 +149,58 @@ def assert_spec_conformance(model, params, trace: TraceSpec,
     return eng_off, eng_on
 
 
+def assert_tp_shard_accounting(eng: ServeEngine):
+    """Per-shard KV-byte accounting cross-checked against the allocator's
+    page counter: every page the decode path read was read once per
+    device, each device streaming exactly its head shard of the page -
+    so shard bytes x tp_degree must equal pages x full page bytes, with
+    no rounding (head counts divide tp_degree by construction).  With
+    tp_degree > 1 the block table is replicated onto every shard, so
+    replication bytes must have accrued."""
+    t = eng.tp_stats()
+    tp = t["tp_degree"]
+    assert t["shard_page_bytes"] * tp == t["page_bytes"], t
+    assert t["shard_kv_bytes_read"] * tp \
+        == t["kv_pages_read"] * t["page_bytes"], t
+    if tp > 1 and t["kv_pages_read"] > 0:
+        assert t["table_bytes_replicated"] > 0, t
+
+
+def assert_tp_conformance(model, params, trace: TraceSpec,
+                          tp_degree: int = 2, speculative: bool = False,
+                          **scfg_extra):
+    """The tensor-parallel differential: replay `trace` through a
+    single-device engine and a head-sharded tp=`tp_degree` engine that
+    differ ONLY in ServeConfig.tp_degree, and assert the sharded engine
+    is observationally identical - bit-identical greedy outputs (the
+    all-gather inside the sharded kernels restores the tp=1 float
+    summation order, so this is exact equality, with the teacher-forced
+    near-tie fallback kept only for belt and braces), equal work-clock
+    and generated-token totals, page conservation on both engines, and
+    the per-shard byte cross-check above.  Returns (tp=1 engine,
+    tp=`tp_degree` engine) for extra checks."""
+    base_out, eng_1 = replay_trace(model, params, trace, speculative,
+                                   **scfg_extra)
+    tp_out, eng_tp = replay_trace(model, params, trace, speculative,
+                                  tp_degree=tp_degree, **scfg_extra)
+    assert base_out.keys() == tp_out.keys()
+    if tp_out != base_out:
+        assert_greedy_equivalent(model, params, eng_tp.sched.finished,
+                                 base_out)
+    s_1, s_tp = eng_1.stats(), eng_tp.stats()
+    assert s_1["work_tokens"] == s_tp["work_tokens"], \
+        (s_1["work_tokens"], s_tp["work_tokens"])
+    assert s_1["gen_tokens"] == s_tp["gen_tokens"]
+    assert s_1["kv_pages_read"] == s_tp["kv_pages_read"], \
+        "sharding must not change WHICH pages decode reads, only how " \
+        "much of each page every device streams"
+    assert_pages_conserved(eng_1)
+    assert_pages_conserved(eng_tp)
+    assert_tp_shard_accounting(eng_1)
+    assert_tp_shard_accounting(eng_tp)
+    return eng_1, eng_tp
+
+
 def assert_sampled_support(model, params, scfg: ServeConfig,
                            done: List[Request], slack: float = 1e-3):
     """Teacher-force every finished request's emitted trace through

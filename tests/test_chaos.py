@@ -286,3 +286,38 @@ def test_random_chaos_soak(seed, model_f32):
     # same seed -> same plan: the soak is replayable, not flaky
     again = random_fault_plan(seed, n_replicas=3, max_tick=10)
     assert again.faults == plan.faults
+
+
+# ===========================================================================
+# tensor-parallel replicas under chaos (docs/tensor_parallel.md)
+# ===========================================================================
+
+@pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >=2 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+def test_kill_tp_replica_mid_trace_is_invisible_in_outputs(model_f32):
+    """The TP chaos contract: killing one head-sharded (tp_degree=2)
+    replica mid-trace leaves the survivors' outputs bit-identical to a
+    fault-free run of the same TP fleet - redispatch, resume, and the
+    sharded kernels compose.  The per-shard byte accounting sweeps every
+    tick (engine check_invariants inside replay_fleet_chaos) and must
+    still hold on the survivor after the drain."""
+    from conformance import assert_tp_shard_accounting
+
+    m, params = model_f32
+    spec = TRACES["mixed"]
+    base, scfg = _baseline(m, params, spec, tp_degree=2)
+    router = _fleet(m, params, scfg, 2)
+    plan = FaultPlan([Fault(2, "kill", 1)])
+    out, done = replay_fleet_chaos(router, spec.build(m.cfg.vocab_size),
+                                   plan)
+    assert set(router.statuses().values()) == {"done"}
+    done_uids = assert_chaos_conformance(m, params, router, done, base)
+    assert done_uids == base.keys()
+    survivor = router.engines[0]
+    assert survivor.tp_stats()["tp_degree"] == 2
+    assert_tp_shard_accounting(survivor)
+    s = router.fleet_stats()
+    assert s["failures"] == 1
+    assert s["replica_states"] == ["healthy", "dead"]
